@@ -1,0 +1,148 @@
+"""Generates the EXPERIMENTS.md tables from benchmarks/results/*.json.
+
+  PYTHONPATH=src python -m benchmarks.report [--section repro|dryrun|roofline]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from collections import defaultdict
+
+import numpy as np
+
+
+def repro_section(results="benchmarks/results"):
+    out = []
+    claims = {}
+    for arch in ("densenet-mini", "unet-mini"):
+        path = os.path.join(results, f"repro_{arch}.json")
+        if not os.path.exists(path):
+            continue
+        rows = json.load(open(path))
+        by_label = defaultdict(list)
+        for r in rows:
+            by_label[r["label"]].append(r)
+        out.append(f"\n### {arch} (mean ± std over "
+                   f"{max(len(v) for v in by_label.values())} seeds)\n")
+        out.append("| method | AUROC | AUPRC | F1 | kappa | epoch s | "
+                   "comm GB | server TF | client TF | avg MF |")
+        out.append("|---|---|---|---|---|---|---|---|---|---|")
+        agg = {}
+        for label, rs in by_label.items():
+            m = {k: (np.mean([r[k] for r in rs]),
+                     np.std([r[k] for r in rs]))
+                 for k in ("auroc", "auprc", "f1", "kappa")}
+            agg[label] = {k: v[0] for k, v in m.items()}
+            r0 = rs[0]
+            out.append(
+                f"| {label} | " +
+                " | ".join(f"{m[k][0]:.3f}±{m[k][1]:.3f}"
+                           for k in ("auroc", "auprc", "f1", "kappa")) +
+                f" | {np.mean([r['epoch_time_s'] for r in rs]):.2f}"
+                f" | {r0['comm_gb']:.4f} | {r0['server_tflops']:.4f}"
+                f" | {r0['avg_client_tflops']:.4f}"
+                f" | {r0['averaging_mflops']:.3f} |")
+        # claim checks (paper §4)
+        c = {}
+        if "Centralized" in agg:
+            cen = agg["Centralized"]
+            dist = [v for k, v in agg.items() if k != "Centralized"]
+            c["C1 centralized best AUPRC"] = all(
+                cen["auprc"] >= d["auprc"] - 1e-9 for d in dist)
+            if "SFLv3_LS_AC" in agg:
+                c["C2 SFLv3>SL (LS AC, AUROC)"] = (
+                    agg["SFLv3_LS_AC"]["auroc"] > agg["SL_LS_AC"]["auroc"])
+                c["C2 SFLv3>SFLv2 (LS AC, AUROC)"] = (
+                    agg["SFLv3_LS_AC"]["auroc"] > agg["SFLv2_LS_AC"]["auroc"])
+            if "SL_LS_AM" in agg:
+                c["C3 AM>AC (LS, AUROC)"] = (
+                    agg["SL_LS_AM"]["auroc"] > agg["SL_LS_AC"]["auroc"])
+            if "SL_NLS_AM" in agg:
+                c["C3 AM>AC (NLS, AUROC)"] = (
+                    agg["SL_NLS_AM"]["auroc"] > agg["SL_NLS_AC"]["auroc"])
+        rows0 = {r["label"]: r for r in rows}
+        if "FL" in rows0 and "SL_LS_AC" in rows0:
+            c["C4 FL comm << SL comm"] = (
+                rows0["FL"]["comm_gb"] < 0.5 * rows0["SL_LS_AC"]["comm_gb"])
+            c["C4 NLS comm > LS comm"] = (
+                rows0["SL_NLS_AC"]["comm_gb"] > rows0["SL_LS_AC"]["comm_gb"])
+            c["C5 FL client TF >> SL client TF"] = (
+                rows0["FL"]["avg_client_tflops"] >
+                2 * rows0["SL_LS_AC"]["avg_client_tflops"])
+            c["C5 SL server >> SL client"] = (
+                rows0["SL_LS_AC"]["server_tflops"] >
+                2 * rows0["SL_LS_AC"]["avg_client_tflops"])
+        claims[arch] = c
+        out.append("\nClaim checks:")
+        for k, v in c.items():
+            out.append(f"* {'✅' if v else '❌'} {k}")
+    return "\n".join(out), claims
+
+
+def dryrun_section(results="benchmarks/results", mesh=None):
+    out = ["| arch | shape | mesh | status | lower s | compile s | "
+           "temp GB/dev | args GB/dev | collective GB/dev |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    files = sorted(glob.glob(os.path.join(results, "dryrun_*.json")))
+    for f in files:
+        if f.count("_") > 4 and not f.endswith(("single.json", "multi.json")):
+            continue      # variant runs listed in §Perf instead
+        r = json.load(open(f))
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"skipped | | | | | |")
+            continue
+        coll = sum(v for k, v in r.get("collectives", {}).items()
+                   if k != "counts")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['status']} | "
+            f"{r.get('lower_s', 0):.1f} | {r.get('compile_s', 0):.1f} | "
+            f"{r.get('temp_size_in_bytes', 0) / 1e9:.2f} | "
+            f"{r.get('argument_size_in_bytes', 0) / 1e9:.2f} | "
+            f"{coll / 1e9:.2f} |")
+    return "\n".join(out)
+
+
+def roofline_section(results="benchmarks/results"):
+    from benchmarks.roofline import roofline_table
+    rows = roofline_table(results)
+    out = ["| arch | shape | dominant | compute s | memory s | "
+           "collective s | useful 6ND/HLO | what would move it |",
+           "|---|---|---|---|---|---|---|---|"]
+    hints = {
+        ("compute",): "more chips / lower precision matmuls",
+        ("memory",): "fewer remat passes, fused layers, bf16 opt states",
+        ("collective",): "shard/reshard less at the cut layer; overlap "
+                         "collectives with compute; int8 link",
+    }
+    for r in rows:
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['status']} "
+                       f"| | | | | {r.get('notes', '')[:60]} |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | **{r['dominant']}** | "
+            f"{r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} | "
+            f"{r['t_collective_s']:.3e} | {r['useful_ratio']:.3f} | "
+            f"{hints[(r['dominant'],)]} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", default="all")
+    args = ap.parse_args()
+    if args.section in ("all", "repro"):
+        text, _ = repro_section()
+        print("## §Repro\n" + text)
+    if args.section in ("all", "dryrun"):
+        print("\n## §Dry-run\n" + dryrun_section())
+    if args.section in ("all", "roofline"):
+        print("\n## §Roofline\n" + roofline_section())
+
+
+if __name__ == "__main__":
+    main()

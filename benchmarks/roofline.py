@@ -1,0 +1,108 @@
+"""Roofline analysis (deliverable g): reads the dry-run JSON records and
+emits the per-(arch × shape) three-term table for EXPERIMENTS.md §Roofline.
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s          (197 TF bf16)
+  memory term     = HLO_bytes_per_device / HBM_bw               (819 GB/s)
+  collective term = collective_bytes_per_device / ICI link bw   (~50 GB/s)
+
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE); the usefulness ratio
+MODEL_FLOPS/HLO_FLOPs flags remat/redundancy waste (values > ~0.5 are good
+for a remat-everything policy; tiny values indicate structural waste).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import REGISTRY
+from repro.launch.dryrun import HW
+from repro.models.transformer import TransformerLM, layer_kinds
+
+
+def param_counts(cfg):
+    """(total_params, active_params) — analytic, no allocation."""
+    import jax
+    model = TransformerLM.build(cfg)
+    shapes = jax.eval_shape(model.init_params, jax.random.key(0))
+    import numpy as np
+    total = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+    active = total
+    if cfg.n_experts:
+        # per MoE layer only top_k (+shared) experts are active
+        per_expert = 3 * cfg.d_model * cfg.d_ff
+        n_moe = sum(1 for k in layer_kinds(cfg) if k == "moe")
+        inactive = n_moe * (cfg.n_experts - cfg.top_k) * per_expert
+        active = total - inactive
+    return total, active
+
+
+def model_flops(arch_id: str, shape_name: str) -> float:
+    """6·N_active·D for a train step (fwd+bwd); 2·N_active·D per decode/
+    prefill token."""
+    cfg = REGISTRY[arch_id].config
+    sh = INPUT_SHAPES[shape_name]
+    _, active = param_counts(cfg)
+    if sh["kind"] == "train":
+        tokens = sh["global_batch"] * sh["seq_len"]
+        return 6.0 * active * tokens
+    if sh["kind"] == "prefill":
+        tokens = sh["global_batch"] * sh["seq_len"]
+        return 2.0 * active * tokens
+    return 2.0 * active * sh["global_batch"]          # decode: 1 token/seq
+
+
+def load_records(results_dir="benchmarks/results", mesh="single"):
+    recs = {}
+    for f in glob.glob(os.path.join(results_dir, f"dryrun_*_{mesh}.json")):
+        r = json.load(open(f))
+        recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def roofline_table(results_dir="benchmarks/results", mesh="single",
+                   chips=256):
+    rows = []
+    recs = load_records(results_dir, mesh)
+    for aid in REGISTRY:
+        for shape in INPUT_SHAPES:
+            r = recs.get((aid, shape))
+            if r is None or r["status"] != "ok":
+                rows.append({"arch": aid, "shape": shape,
+                             "status": (r or {}).get("status", "missing"),
+                             "notes": (r or {}).get("notes", "")})
+                continue
+            rf = r["roofline"]
+            mf = model_flops(aid, shape)
+            hlo_total = r["hlo_flops"] * chips   # cost_analysis is per device
+            rows.append({
+                "arch": aid, "shape": shape, "status": "ok",
+                "t_compute_s": rf["t_compute"],
+                "t_memory_s": rf["t_memory"],
+                "t_collective_s": rf["t_collective"],
+                "dominant": rf["dominant"],
+                "model_flops": mf,
+                "useful_ratio": mf / hlo_total if hlo_total else float("nan"),
+                "collective_gb": rf["collective_bytes"] / 1e9,
+            })
+    return rows
+
+
+def main():
+    rows = roofline_table()
+    print("arch,shape,dominant,t_compute_s,t_memory_s,t_collective_s,"
+          "useful_ratio,collective_gb_per_dev")
+    for r in rows:
+        if r.get("status") != "ok":
+            print(f"{r['arch']},{r['shape']},{r['status']},,,,,")
+            continue
+        print(f"{r['arch']},{r['shape']},{r['dominant']},"
+              f"{r['t_compute_s']:.3e},{r['t_memory_s']:.3e},"
+              f"{r['t_collective_s']:.3e},{r['useful_ratio']:.3f},"
+              f"{r['collective_gb']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Quickstart: train a SplitFedv3 model (the paper's method) across five
+virtual hospitals on the synthetic chest-X-ray task, then compare with plain
+split learning — all on CPU in ~2 minutes.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro import optim as O
+from repro.core.partition import cnn_adapter
+from repro.core.strategies import make_strategy
+from repro.data.synthetic import make_cxr_clients
+from repro.models.cnn import DenseNetConfig, build_densenet
+
+
+def main():
+    # five hospitals, non-IID scanners (see repro/data/synthetic.py)
+    clients = make_cxr_clients(seed=0, train_per_client=64,
+                               val_per_client=32, test_per_client=32,
+                               image_size=32)
+    cfg = DenseNetConfig(growth=8, blocks=(2, 4), stem_ch=16, cut_layer=2)
+
+    for method in ["sflv3_ac", "sl_ac"]:
+        adapter = cnn_adapter(build_densenet(cfg))
+        strat = make_strategy(method, adapter, lambda: O.adam(3e-4),
+                              n_clients=len(clients))
+        state = strat.setup(jax.random.key(0))
+        rng = np.random.default_rng(0)
+        t0 = time.time()
+        for epoch in range(4):
+            state, log = strat.run_epoch(
+                state, [c.train for c in clients], rng, batch_size=16)
+            print(f"[{method}] epoch {epoch}: loss={log.mean_loss:.4f}")
+        metrics = strat.evaluate(state, clients, "test", batch_size=32)
+        print(f"[{method}] test {metrics}  ({time.time() - t0:.0f}s)\n")
+
+
+if __name__ == "__main__":
+    main()

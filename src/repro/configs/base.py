@@ -1,0 +1,34 @@
+"""Config registry plumbing.
+
+Every assigned architecture ships as ``src/repro/configs/<id>.py`` exposing:
+  CONFIG — the exact published configuration (sources cited in `source`)
+  SMOKE  — a reduced same-family variant (<=2-ish layers, d_model<=512,
+           <=4 experts) used by the CPU smoke tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.transformer import ModelConfig
+
+# input shapes assigned to this paper (see the assignment block)
+INPUT_SHAPES = {
+    "train_4k":    {"seq_len": 4096,   "global_batch": 256, "kind": "train"},
+    "prefill_32k": {"seq_len": 32768,  "global_batch": 32,  "kind": "prefill"},
+    "decode_32k":  {"seq_len": 32768,  "global_batch": 128, "kind": "decode"},
+    "long_500k":   {"seq_len": 524288, "global_batch": 1,   "kind": "decode"},
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchEntry:
+    arch_id: str
+    config: ModelConfig
+    smoke: ModelConfig
+    shapes: tuple[str, ...]          # which INPUT_SHAPES this arch runs
+    skip_notes: str = ""             # why any shape is skipped (DESIGN.md)
+
+
+_FULL = ("train_4k", "prefill_32k", "decode_32k")
+_ALL = ("train_4k", "prefill_32k", "decode_32k", "long_500k")

@@ -1,0 +1,23 @@
+"""The paper's own two model families (§3.2):
+DenseNet-121 @224^2 and U-Net (Xception-flavoured) @768^2, plus the reduced
+"mini" variants used for the CPU reproduction experiments.
+"""
+
+from repro.models.cnn import DenseNetConfig, UNetConfig
+
+DENSENET121_PAPER = DenseNetConfig(
+    name="densenet121-paper", growth=32, blocks=(6, 12, 24, 16), stem_ch=64,
+    in_ch=1, n_classes=1, cut_layer=4)       # paper: first 4 layers at client
+
+UNET_PAPER = UNetConfig(
+    name="unet-xception-paper", widths=(64, 128, 256, 512, 728), in_ch=1,
+    n_classes=1, cut_layer=6)                # paper: first 6 layers at client
+
+# reduced variants for the CPU reproduction run (orderings, not absolutes)
+DENSENET_MINI = DenseNetConfig(
+    name="densenet-mini", growth=12, blocks=(3, 6, 8), stem_ch=24,
+    in_ch=1, n_classes=1, cut_layer=3)
+
+UNET_MINI = UNetConfig(
+    name="unet-mini", widths=(16, 32, 64, 96), in_ch=1, n_classes=1,
+    cut_layer=2)

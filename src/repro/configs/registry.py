@@ -1,0 +1,33 @@
+"""--arch <id> registry over the 10 assigned architectures."""
+
+from __future__ import annotations
+
+from repro.configs import (kimi_k2_1t_a32b, musicgen_medium, internvl2_76b,
+                           minicpm_2b, llama3_405b, zamba2_7b, smollm_135m,
+                           mistral_large_123b, llama4_scout_17b_a16e,
+                           mamba2_130m)
+from repro.configs.base import ArchEntry, INPUT_SHAPES
+
+_MODULES = [kimi_k2_1t_a32b, musicgen_medium, internvl2_76b, minicpm_2b,
+            llama3_405b, zamba2_7b, smollm_135m, mistral_large_123b,
+            llama4_scout_17b_a16e, mamba2_130m]
+
+REGISTRY: dict[str, ArchEntry] = {m.ENTRY.arch_id: m.ENTRY for m in _MODULES}
+
+ARCH_IDS = list(REGISTRY)
+
+
+def get(arch_id: str) -> ArchEntry:
+    if arch_id not in REGISTRY:
+        raise KeyError(f"unknown --arch {arch_id!r}; known: {ARCH_IDS}")
+    return REGISTRY[arch_id]
+
+
+def combos():
+    """All (arch_id, shape_name) pairs the dry-run must lower (40 total,
+    with long_500k included only where the arch qualifies)."""
+    out = []
+    for aid, e in REGISTRY.items():
+        for shape in INPUT_SHAPES:
+            out.append((aid, shape, shape in e.shapes))
+    return out

@@ -1,0 +1,81 @@
+"""Per-epoch communication accounting (paper Table 4).
+
+All quantities are derived analytically from activation/parameter pytree
+byte sizes via ``jax.eval_shape`` — the same numbers the paper measured over
+PySyft sockets.  The dry-run cross-checks them against HLO collective bytes.
+
+One epoch = training over all train batches + validation over all val
+batches (paper §4.3).  Per train batch the cut-layer traffic is:
+  LS : activations up + activation-gradients down           (front<->middle)
+  NLS: + hidden up + hidden-gradients down                  (middle<->tail)
+Validation moves activations only (no gradients).
+
+FL moves 2 x model bytes per client per round; SFLv2 additionally moves the
+client segment back and forth for fed-averaging; SFLv3's averaged segment
+lives on the server so no extra transfer occurs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.core.partition import SplitAdapter, leaf_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class CommProfile:
+    method: str
+    bytes_per_epoch: float
+    breakdown: dict
+
+    @property
+    def gb(self):
+        return self.bytes_per_epoch / 1e9
+
+
+def _batch_count(n_samples: int, batch_size: int) -> int:
+    return n_samples // batch_size
+
+
+def comm_per_epoch(method: str, adapter: SplitAdapter, example_batch: dict,
+                   n_train: list[int], n_val: list[int],
+                   batch_size: int) -> CommProfile:
+    """``n_train``/``n_val``: per-client sample counts."""
+    params = jax.eval_shape(adapter.init, jax.random.key(0))
+    model_bytes = leaf_bytes(params)
+    client_bytes = leaf_bytes(params["front"]) + (
+        leaf_bytes(params["tail"]) if adapter.nls else 0)
+
+    specs = adapter.boundary_specs(example_batch, params)
+    act_fm = leaf_bytes(specs["front->middle"])         # per batch
+    act_mt = leaf_bytes(specs.get("middle->tail", ())) if adapter.nls else 0
+
+    train_batches = sum(_batch_count(n, batch_size) for n in n_train)
+    val_batches = sum(_batch_count(max(n, batch_size), batch_size)
+                      if n >= batch_size else 1 for n in n_val)
+
+    bd = {}
+    if method == "centralized":
+        total = 0.0
+    elif method == "fl":
+        n_clients = len(n_train)
+        bd["model_down"] = model_bytes * n_clients
+        bd["model_up"] = model_bytes * n_clients
+        total = sum(bd.values())
+    else:
+        # SL / SFLv2 / SFLv3 share the cut-layer activation traffic
+        bd["train_act_up"] = act_fm * train_batches
+        bd["train_grad_down"] = act_fm * train_batches
+        bd["val_act_up"] = act_fm * val_batches
+        if adapter.nls:
+            bd["train_hidden_up"] = act_mt * train_batches
+            bd["train_hidden_grad_down"] = act_mt * train_batches
+            bd["val_hidden_up"] = act_mt * val_batches
+        if method.startswith("sflv2") or method.startswith("sflv1"):
+            # client segments shipped to fed server and back for averaging
+            bd["client_seg_avg"] = 2 * client_bytes * len(n_train)
+        total = sum(bd.values())
+    return CommProfile(method, float(total), bd)

@@ -1,0 +1,148 @@
+"""Cut-layer model partitioning — the structural heart of SL / SplitFed.
+
+Both model families (transformer LMs, unit-list CNNs) are wrapped into a
+uniform ``SplitAdapter`` so every strategy in ``repro.core.strategies`` is
+architecture-agnostic.  Segments:
+
+  * ``front``  — at the client; raw inputs never leave it.
+  * ``middle`` — at the server (the bulk of the compute).
+  * ``tail``   — at the client again, only in the non-label-sharing
+    (U-shaped) configuration; holds the head so labels never leave either.
+
+Activations crossing segment boundaries may be arbitrary pytrees (the U-Net
+front emits (hidden, skips)); communication accounting sums leaf bytes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitAdapter:
+    """Uniform three-segment view of a model for the distributed strategies."""
+    name: str
+    seg_names: tuple[str, ...]                 # ("front","middle"[,"tail"])
+    init: Callable[[Any], Any]                 # key -> params {seg: tree}
+    inputs: Callable[[dict], Any]              # batch -> x0
+    apply_seg: Callable[..., Any]              # (seg, seg_params, x, batch, train) -> x
+    loss_from_output: Callable[[Any, dict], Any]
+    scores_from_output: Callable[[Any], Any]   # output -> probabilities
+
+    @property
+    def nls(self) -> bool:
+        return "tail" in self.seg_names
+
+    # -- composition helpers -------------------------------------------------
+    def full_loss(self, params, batch, train=True):
+        x = self.inputs(batch)
+        for seg in self.seg_names:
+            x = self.apply_seg(seg, params[seg], x, batch, train)
+        return self.loss_from_output(x, batch)
+
+    def full_scores(self, params, batch):
+        x = self.inputs(batch)
+        for seg in self.seg_names:
+            x = self.apply_seg(seg, params[seg], x, batch, False)
+        return self.scores_from_output(x)
+
+    # -- boundary shape accounting (for repro.core.comm) ---------------------
+    def boundary_specs(self, example_batch: dict, params=None) -> dict:
+        """ShapeDtypeStructs of every segment-boundary activation."""
+        if params is None:
+            params = jax.eval_shape(self.init, jax.random.key(0))
+
+        def front(p, b):
+            return self.apply_seg("front", p, self.inputs(b), b, True)
+
+        specs = {}
+        h = jax.eval_shape(front, params["front"], example_batch)
+        specs["front->middle"] = h
+        if self.nls:
+            def middle(p, hh, b):
+                return self.apply_seg("middle", p, hh, b, True)
+            h2 = jax.eval_shape(middle, params["middle"], h, example_batch)
+            specs["middle->tail"] = h2
+        return specs
+
+
+# ---------------------------------------------------------------------------
+# adapters
+# ---------------------------------------------------------------------------
+
+def cnn_adapter(model) -> SplitAdapter:
+    """Wrap a repro.models.cnn.CNNModel."""
+
+    def init(key):
+        return model.init_params(key)
+
+    def inputs(batch):
+        return batch["image"]
+
+    def apply_seg(seg, seg_params, x, batch, train=False):
+        return model.apply_segment(seg_params, seg, x, train)
+
+    def loss_from_output(out, batch):
+        from repro.models.cnn import bce_loss
+        return bce_loss(out, batch["label"])
+
+    def scores_from_output(out):
+        return jax.nn.sigmoid(out.reshape(-1).astype(jnp.float32))
+
+    return SplitAdapter(model.name, tuple(model.seg_names), init, inputs,
+                        apply_seg, loss_from_output, scores_from_output)
+
+
+def lm_adapter(model) -> SplitAdapter:
+    """Wrap a repro.models.transformer.TransformerLM (built with cut/nls)."""
+    seg_names = tuple(s.name for s in model.segments)
+    seg_index = {s.name: i for i, s in enumerate(model.segments)}
+
+    def init(key):
+        return model.init_params(key)
+
+    def inputs(batch):
+        return batch["tokens"][:, :-1]
+
+    def apply_seg(seg, seg_params, x, batch, train=False):
+        i = seg_index[seg]
+        out, _, aux = model.apply({seg: seg_params}, x,
+                                  positions=_positions(batch, model),
+                                  frontend_emb=batch.get("frontend_emb"),
+                                  train=train, segment_range=(i, i + 1))
+        # carry aux loss along with activations so it reaches the loss
+        if seg == seg_names[-1]:
+            return out
+        return out
+
+    def _positions(batch, model):
+        b, s = batch["tokens"].shape
+        s -= 1
+        fe = batch.get("frontend_emb")
+        total = s + (fe.shape[1] if fe is not None else 0)
+        return jnp.broadcast_to(jnp.arange(total, dtype=jnp.int32), (b, total))
+
+    def loss_from_output(logits, batch):
+        labels = batch["tokens"][:, 1:]
+        if batch.get("frontend_emb") is not None:
+            logits = logits[:, -labels.shape[1]:]
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(logits.astype(jnp.float32),
+                                 labels[..., None], axis=-1)[..., 0]
+        return (lse - ll).mean()
+
+    def scores_from_output(logits):
+        return jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+
+    return SplitAdapter(model.cfg.name, seg_names, init, inputs, apply_seg,
+                        loss_from_output, scores_from_output)
+
+
+def leaf_bytes(tree) -> int:
+    return int(sum(int(np.prod(l.shape)) * l.dtype.itemsize
+                   for l in jax.tree.leaves(tree)))

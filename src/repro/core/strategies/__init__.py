@@ -1,0 +1,27 @@
+"""Strategy registry: method grid of the paper's Table 2."""
+
+from repro.core.strategies.base import Strategy
+from repro.core.strategies.centralized import Centralized
+from repro.core.strategies.federated import FedAvg
+from repro.core.strategies.split import SplitLearning
+from repro.core.strategies.splitfed import SplitFedV1, SplitFedV2, SplitFedV3
+
+
+def make_strategy(method: str, adapter, opt_factory, n_clients):
+    """method: centralized | fl | sl_{ac,am} | sflv{1,2,3}_{ac,am}."""
+    if method == "centralized":
+        return Centralized(adapter, opt_factory, n_clients)
+    if method == "fl":
+        return FedAvg(adapter, opt_factory, n_clients)
+    kind, schedule = method.rsplit("_", 1)
+    cls = {"sl": SplitLearning, "sflv1": SplitFedV1,
+           "sflv2": SplitFedV2, "sflv3": SplitFedV3}[kind]
+    return cls(adapter, opt_factory, n_clients, schedule)
+
+
+METHODS = ["centralized", "fl", "sl_ac", "sl_am",
+           "sflv2_ac", "sflv3_ac", "sflv1_ac"]
+
+__all__ = ["Strategy", "Centralized", "FedAvg", "SplitLearning",
+           "SplitFedV1", "SplitFedV2", "SplitFedV3", "make_strategy",
+           "METHODS"]

@@ -1,0 +1,197 @@
+"""Strategy API + shared jitted step builders.
+
+Every strategy consumes a ``SplitAdapter`` (architecture-agnostic) and an
+optimizer factory, and exposes:
+
+    setup(key)                        -> state
+    run_epoch(state, client_data, rng, batch_size) -> (state, log)
+    scores(state, client_idx, data, batch_size)    -> per-sample scores
+
+``client_data`` is a list (len n_clients) of dicts of numpy arrays.
+Evaluation follows the paper (§3.4): a sample from hospital i always passes
+through hospital i's own client segment(s); FL/centralized have one model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.partition import SplitAdapter
+from repro import optim as O
+
+
+@dataclasses.dataclass
+class EpochLog:
+    losses: list
+    steps: int
+
+    @property
+    def mean_loss(self):
+        return float(np.mean(self.losses)) if self.losses else float("nan")
+
+
+def tree_mean(trees):
+    return jax.tree.map(lambda *xs: sum(xs) / len(xs), *trees)
+
+
+def tree_weighted_mean(trees, weights):
+    total = sum(weights)
+    return jax.tree.map(
+        lambda *xs: sum(w * x for w, x in zip(weights, xs)) / total, *trees)
+
+
+def np_batches(data: dict, batch_size: int, rng: np.random.Generator | None):
+    n = len(next(iter(data.values())))
+    idx = np.arange(n)
+    if rng is not None:
+        rng.shuffle(idx)
+    nb = n // batch_size
+    return [{k: v[idx[i * batch_size:(i + 1) * batch_size]]
+             for k, v in data.items()} for i in range(nb)]
+
+
+class Strategy:
+    name: str = "base"
+
+    def __init__(self, adapter: SplitAdapter, opt_factory: Callable[[], O.Optimizer],
+                 n_clients: int):
+        self.adapter = adapter
+        self.opt_factory = opt_factory
+        self.n_clients = n_clients
+
+    # -- to implement ---------------------------------------------------------
+    def setup(self, key):
+        raise NotImplementedError
+
+    def run_epoch(self, state, client_data, rng, batch_size):
+        raise NotImplementedError
+
+    def params_for_eval(self, state, client_idx) -> dict:
+        """Full param dict (all segments) used to score client ``client_idx``."""
+        raise NotImplementedError
+
+    # -- common ---------------------------------------------------------------
+    def _scores_fn(self):
+        if not hasattr(self, "_scores_jit"):
+            self._scores_jit = jax.jit(self.adapter.full_scores)
+        return self._scores_jit
+
+    def scores(self, state, client_idx, data, batch_size=60):
+        params = self.params_for_eval(state, client_idx)
+        fn = self._scores_fn()
+        outs = []
+        for b in np_batches(data, min(batch_size, len(data["label"])), None):
+            outs.append(np.asarray(fn(params, b)))
+        return np.concatenate(outs) if outs else np.zeros((0,))
+
+    def evaluate(self, state, clients, split="test", batch_size=60):
+        """Pooled metrics across clients, each scored by its own front."""
+        from repro.train import metrics as MET
+        all_scores, all_labels = [], []
+        for i, c in enumerate(clients):
+            data = getattr(c, split)
+            s = self.scores(state, i, data, batch_size)
+            all_scores.append(s)
+            all_labels.append(data["label"][:len(s)])
+        return MET.all_metrics(np.concatenate(all_labels),
+                               np.concatenate(all_scores))
+
+    def val_loss(self, state, clients, batch_size=60):
+        if not hasattr(self, "_val_loss_jit"):
+            self._val_loss_jit = jax.jit(partial(self.adapter.full_loss,
+                                                 train=False))
+        fn = self._val_loss_jit
+        tot, n = 0.0, 0
+        for i, c in enumerate(clients):
+            params = self.params_for_eval(state, i)
+            for b in np_batches(c.val, min(batch_size, len(c.val["label"])),
+                                None):
+                tot += float(fn(params, b)); n += 1
+        return tot / max(n, 1)
+
+
+# ---------------------------------------------------------------------------
+# jitted step builders
+# ---------------------------------------------------------------------------
+
+def make_full_step(adapter: SplitAdapter, opt: O.Optimizer):
+    """Plain step over ALL segments jointly (centralized / FL local)."""
+    @jax.jit
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(adapter.full_loss)(params, batch)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        return O.apply_updates(params, updates), opt_state, loss
+    return step
+
+
+def make_split_step(adapter: SplitAdapter, opt_client: O.Optimizer,
+                    opt_server: O.Optimizer):
+    """One SL/SFLv2 step: joint grad through client_i(+tail_i) and server.
+
+    Numerically identical to the paper's two-hop backprop; the hop itself is
+    the activation/gradient transfer accounted in repro.core.comm.
+    """
+    nls = adapter.nls
+
+    @jax.jit
+    def step(client_params, server_params, c_opt, s_opt, batch):
+        def loss_fn(cp, sp):
+            params = {"front": cp["front"], "middle": sp}
+            if nls:
+                params["tail"] = cp["tail"]
+            return adapter.full_loss(params, batch)
+
+        loss, (gc, gs) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
+            client_params, server_params)
+        cu, c_opt = opt_client.update(gc, c_opt, client_params)
+        su, s_opt = opt_server.update(gs, s_opt, server_params)
+        return (O.apply_updates(client_params, cu),
+                O.apply_updates(server_params, su), c_opt, s_opt, loss)
+    return step
+
+
+def make_sflv3_step(adapter: SplitAdapter, opt_client: O.Optimizer,
+                    opt_server: O.Optimizer, n_clients: int):
+    """SplitFedv3 step (paper Algorithm 1, batch-synchronous form):
+    clients run in parallel (vmap over the stacked client axis); the server
+    segment is updated once with the weighted average of per-client server
+    gradients; client segments update individually (never averaged)."""
+    nls = adapter.nls
+
+    @jax.jit
+    def step(stacked_clients, server_params, c_opt, s_opt, stacked_batch):
+        def client_loss(cp, sp, batch):
+            params = {"front": cp["front"], "middle": sp}
+            if nls:
+                params["tail"] = cp["tail"]
+            return adapter.full_loss(params, batch)
+
+        def mean_loss(sc, sp):
+            losses = jax.vmap(lambda cp, b: client_loss(cp, sp, b))(
+                sc, stacked_batch)
+            return losses.mean(), losses
+
+        (loss, losses), (gc, gs) = jax.value_and_grad(
+            mean_loss, argnums=(0, 1), has_aux=True)(stacked_clients,
+                                                     server_params)
+        # gc is stacked per-client (mean grad => scale back to per-client)
+        gc = jax.tree.map(lambda g: g * n_clients, gc)
+        cu, c_opt = opt_client.update(gc, c_opt, stacked_clients)
+        su, s_opt = opt_server.update(gs, s_opt, server_params)
+        return (O.apply_updates(stacked_clients, cu),
+                O.apply_updates(server_params, su), c_opt, s_opt, losses)
+    return step
+
+
+def stack_trees(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def unstack_tree(tree, n):
+    return [jax.tree.map(lambda x: x[i], tree) for i in range(n)]

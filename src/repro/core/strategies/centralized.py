@@ -1,0 +1,32 @@
+"""Centralized training — the paper's benchmark upper bound (§3.6)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.strategies.base import (Strategy, EpochLog, make_full_step,
+                                        np_batches)
+
+
+class Centralized(Strategy):
+    name = "centralized"
+
+    def setup(self, key):
+        params = self.adapter.init(key)
+        if not hasattr(self, "_opt"):
+            self._opt = self.opt_factory()
+            self._step = make_full_step(self.adapter, self._opt)
+        return {"params": params, "opt": self._opt.init(params)}
+
+    def run_epoch(self, state, client_data, rng, batch_size):
+        pooled = {k: np.concatenate([d[k] for d in client_data])
+                  for k in client_data[0]}
+        losses = []
+        for batch in np_batches(pooled, batch_size, rng):
+            state["params"], state["opt"], loss = self._step(
+                state["params"], state["opt"], batch)
+            losses.append(float(loss))
+        return state, EpochLog(losses, len(losses))
+
+    def params_for_eval(self, state, client_idx):
+        return state["params"]

@@ -1,0 +1,41 @@
+"""Federated learning with FedAvg (paper §1.1/§3.3).
+
+One federated round == one epoch (as in the paper): the global model is
+pushed to every client, each client runs one local epoch with its own Adam,
+and the server aggregates the resulting parameters with a data-size-weighted
+average (McMahan et al. federated averaging).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.strategies.base import (Strategy, EpochLog, make_full_step,
+                                        np_batches, tree_weighted_mean)
+
+
+class FedAvg(Strategy):
+    name = "fl"
+
+    def setup(self, key):
+        params = self.adapter.init(key)
+        if not hasattr(self, "_opt"):
+            self._opt = self.opt_factory()
+            self._step = make_full_step(self.adapter, self._opt)
+        return {"params": params}
+
+    def run_epoch(self, state, client_data, rng, batch_size):
+        locals_, weights, losses = [], [], []
+        for ci, data in enumerate(client_data):
+            p = state["params"]                    # start from global
+            opt_state = self._opt.init(p)          # fresh optimizer per round
+            for batch in np_batches(data, batch_size, rng):
+                p, opt_state, loss = self._step(p, opt_state, batch)
+                losses.append(float(loss))
+            locals_.append(p)
+            weights.append(len(data["label"]))
+        state["params"] = tree_weighted_mean(locals_, weights)
+        return state, EpochLog(losses, len(losses))
+
+    def params_for_eval(self, state, client_idx):
+        return state["params"]

@@ -1,0 +1,75 @@
+"""Split learning (paper §1.2/§3.4) with the two training schedules:
+
+* alternate-client (AC): prior art — clients take whole-dataset turns.
+* alternate-minibatch (AM): the paper's proposed schedule — mini-batch turns.
+
+Client segments are unique per client and never synchronized (paper: "We do
+not use any form of weight synchronization").  The server segment (and its
+Adam state) is shared and updated sequentially in schedule order.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.schedule import SCHEDULES
+from repro.core.strategies.base import (Strategy, EpochLog, make_split_step,
+                                        np_batches, tree_mean)
+
+
+class SplitLearning(Strategy):
+    name = "sl"
+
+    def __init__(self, adapter, opt_factory, n_clients, schedule="ac"):
+        super().__init__(adapter, opt_factory, n_clients)
+        self.schedule = schedule
+        self.name = f"sl_{schedule}"
+
+    def _client_tree(self, params):
+        t = {"front": params["front"]}
+        if self.adapter.nls:
+            t["tail"] = params["tail"]
+        return t
+
+    def setup(self, key):
+        import jax
+        keys = jax.random.split(key, self.n_clients)
+        if not hasattr(self, "_opt_c"):
+            self._opt_c, self._opt_s = self.opt_factory(), self.opt_factory()
+            self._step = make_split_step(self.adapter, self._opt_c,
+                                         self._opt_s)
+        opt_c, opt_s = self._opt_c, self._opt_s
+        clients, c_opts = [], []
+        server = None
+        for k in keys:
+            params = self.adapter.init(k)
+            ct = self._client_tree(params)
+            clients.append(ct)
+            c_opts.append(opt_c.init(ct))
+            if server is None:
+                server = params["middle"]
+        return {"clients": clients, "server": server,
+                "c_opts": c_opts, "s_opt": opt_s.init(server)}
+
+    def run_epoch(self, state, client_data, rng, batch_size):
+        batches = [np_batches(d, batch_size, rng) for d in client_data]
+        order = SCHEDULES[self.schedule]([len(b) for b in batches])
+        losses = []
+        for c, b in order:
+            (state["clients"][c], state["server"], state["c_opts"][c],
+             state["s_opt"], loss) = self._step(
+                state["clients"][c], state["server"], state["c_opts"][c],
+                state["s_opt"], batches[c][b])
+            losses.append(float(loss))
+        self._end_of_epoch(state)
+        return state, EpochLog(losses, len(losses))
+
+    def _end_of_epoch(self, state):
+        pass
+
+    def params_for_eval(self, state, client_idx):
+        p = {"front": state["clients"][client_idx]["front"],
+             "middle": state["server"]}
+        if self.adapter.nls:
+            p["tail"] = state["clients"][client_idx]["tail"]
+        return p

@@ -1,0 +1,109 @@
+"""SplitFed variants.
+
+* SFLv2 (Thapa et al.): server segment trained SEQUENTIALLY like SL, but the
+  client segments are synchronized at the end of each epoch by fed-averaging.
+* SFLv3 (THE PAPER'S PROPOSAL, Algorithm 1): client segments stay unique
+  (like SL), while the server segment is updated with the weighted AVERAGE of
+  per-client gradients computed in parallel — removing the sequential
+  catastrophic-forgetting bias of SL/SFLv2 server training.
+* SFLv1 (bonus; the paper excluded it for hardware reasons): SFLv3's parallel
+  server + fed-averaged client segments each round.
+
+SFLv3 implementation note (recorded in DESIGN.md): Algorithm 1 as printed
+concatenates a full epoch of activations and performs one server update per
+round; trained with Adam@1e-4 for 10 rounds that cannot reach the reported
+AUROC. We use the batch-synchronous reading (one averaged server update per
+mini-batch step, "same as SplitFedv1" per the paper's own description),
+which matches the reported training times and accuracies.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.strategies.base import (EpochLog, make_sflv3_step,
+                                        np_batches, stack_trees,
+                                        tree_mean, unstack_tree)
+from repro.core.strategies.split import SplitLearning
+
+
+class SplitFedV2(SplitLearning):
+    """Sequential server training + end-of-epoch client averaging."""
+
+    def __init__(self, adapter, opt_factory, n_clients, schedule="ac"):
+        super().__init__(adapter, opt_factory, n_clients, schedule)
+        self.name = f"sflv2_{schedule}"
+
+    def _end_of_epoch(self, state):
+        avg = tree_mean(state["clients"])
+        state["clients"] = [avg for _ in range(self.n_clients)]
+
+
+class SplitFedV3(SplitLearning):
+    """Unique clients + gradient-averaged parallel server updates (Alg. 1)."""
+
+    def __init__(self, adapter, opt_factory, n_clients, schedule="ac"):
+        super().__init__(adapter, opt_factory, n_clients, schedule)
+        self.name = f"sflv3_{schedule}"
+
+    def setup(self, key):
+        import jax
+        keys = jax.random.split(key, self.n_clients)
+        if not hasattr(self, "_opt_c"):
+            self._opt_c, self._opt_s = self.opt_factory(), self.opt_factory()
+            self._step3 = make_sflv3_step(self.adapter, self._opt_c,
+                                          self._opt_s, self.n_clients)
+        opt_c, opt_s = self._opt_c, self._opt_s
+        clients, server = [], None
+        for k in keys:
+            params = self.adapter.init(k)
+            clients.append(self._client_tree(params))
+            if server is None:
+                server = params["middle"]
+        stacked = stack_trees(clients)
+        return {"stacked_clients": stacked, "server": server,
+                "c_opt": opt_c.init(stacked), "s_opt": opt_s.init(server)}
+
+    def run_epoch(self, state, client_data, rng, batch_size):
+        batches = [np_batches(d, batch_size, rng) for d in client_data]
+        steps = max(len(b) for b in batches)
+        losses = []
+        for s in range(steps):
+            # clients that exhausted their data wrap around (all data is
+            # seen once per epoch; the server always averages n clients)
+            stacked_batch = stack_trees(
+                [batches[c][s % len(batches[c])] for c in
+                 range(self.n_clients)])
+            (state["stacked_clients"], state["server"], state["c_opt"],
+             state["s_opt"], step_losses) = self._step3(
+                state["stacked_clients"], state["server"], state["c_opt"],
+                state["s_opt"], stacked_batch)
+            losses.extend(np.asarray(step_losses).tolist())
+        self._end_of_epoch(state)
+        return state, EpochLog(losses, steps)
+
+    def _end_of_epoch(self, state):
+        pass
+
+    def params_for_eval(self, state, client_idx):
+        import jax
+        ct = jax.tree.map(lambda x: x[client_idx], state["stacked_clients"])
+        p = {"front": ct["front"], "middle": state["server"]}
+        if self.adapter.nls:
+            p["tail"] = ct["tail"]
+        return p
+
+
+class SplitFedV1(SplitFedV3):
+    """Parallel server (like v3) + fed-averaged clients each round."""
+
+    def __init__(self, adapter, opt_factory, n_clients, schedule="ac"):
+        super().__init__(adapter, opt_factory, n_clients, schedule)
+        self.name = f"sflv1_{schedule}"
+
+    def _end_of_epoch(self, state):
+        import jax
+        import jax.numpy as jnp
+        avg = jax.tree.map(lambda x: jnp.broadcast_to(
+            x.mean(axis=0, keepdims=True), x.shape), state["stacked_clients"])
+        state["stacked_clients"] = avg

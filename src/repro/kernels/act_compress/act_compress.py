@@ -1,0 +1,74 @@
+"""Cut-layer activation compression — Pallas TPU kernel (beyond-paper).
+
+The paper's headline infeasibility result is SL/SFL communication volume
+(774 GB/epoch for U-Net label-sharing).  This kernel fuses per-row absmax
+int8 quantization of the cut-layer activations so the bytes crossing the
+client<->server boundary shrink ~4x (bf16 -> int8 + 1 fp32 scale per row)
+in a single VMEM pass — no extra HBM round-trip for the absmax.
+
+Tiling: grid over row blocks; each cell reads a (block_rows, D) tile into
+VMEM, reduces |x| over D (VPU), scales, rounds and writes the int8 tile
+plus the (block_rows, 1) scale column.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref):
+    o_ref[...] = (q_ref[...].astype(jnp.float32) * s_ref[...]).astype(
+        o_ref.dtype)
+
+
+def quantize_pallas(x, *, block_rows=256, interpret=True):
+    """x: (T, D) -> (int8 (T, D), f32 scale (T, 1))."""
+    t, d = x.shape
+    block_rows = min(block_rows, t)
+    assert t % block_rows == 0
+    grid = (t // block_rows,)
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, d), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+                   pl.BlockSpec((block_rows, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((t, d), jnp.int8),
+                   jax.ShapeDtypeStruct((t, 1), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(x)
+
+
+def dequantize_pallas(q, scale, dtype=jnp.bfloat16, *, block_rows=256,
+                      interpret=True):
+    t, d = q.shape
+    block_rows = min(block_rows, t)
+    assert t % block_rows == 0
+    grid = (t // block_rows,)
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+                  pl.BlockSpec((block_rows, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(q, scale)

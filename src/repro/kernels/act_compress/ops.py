@@ -1,0 +1,69 @@
+"""Jitted wrappers + straight-through-estimator roundtrip for training.
+
+``compress_boundary`` is applied at the SL/SFL cut layer: forward passes the
+int8-roundtripped activation (what the server actually receives over the
+wire); the backward pass is identity (STE), matching deployments that
+quantize the link but keep full-precision gradients client-side.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.act_compress.act_compress import (dequantize_pallas,
+                                                     quantize_pallas)
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+@jax.jit
+def quantize(x):
+    """x: (..., D) -> (int8 same shape, f32 scales (..., 1))."""
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    block = min(256, max(8, x2.shape[0]))
+    pad = (-x2.shape[0]) % block
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    q, s = quantize_pallas(x2, block_rows=block, interpret=_INTERPRET)
+    import math
+    n = math.prod(shape[:-1])
+    return (q[:n].reshape(shape),
+            s[:n].reshape(shape[:-1] + (1,)))
+
+
+@partial(jax.jit, static_argnames=("dtype",))
+def dequantize(q, s, dtype=jnp.bfloat16):
+    shape = q.shape
+    q2 = q.reshape(-1, shape[-1])
+    s2 = s.reshape(-1, 1)
+    block = min(256, max(8, q2.shape[0]))
+    pad = (-q2.shape[0]) % block
+    if pad:
+        q2 = jnp.pad(q2, ((0, pad), (0, 0)))
+        s2 = jnp.pad(s2, ((0, pad), (0, 0)))
+    out = dequantize_pallas(q2, s2, dtype, block_rows=block,
+                            interpret=_INTERPRET)
+    import math
+    n = math.prod(shape[:-1])
+    return out[:n].reshape(shape)
+
+
+@jax.custom_vjp
+def compress_boundary(x):
+    q, s = quantize(x)
+    return dequantize(q, s, x.dtype)
+
+
+def _fwd(x):
+    return compress_boundary(x), None
+
+
+def _bwd(_, g):
+    return (g,)       # straight-through
+
+
+compress_boundary.defvjp(_fwd, _bwd)

@@ -1,0 +1,22 @@
+"""Oracle for the cut-layer activation compressor (per-row int8)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_ref(x):
+    """x: (T, D) -> (q int8 (T, D), scale f32 (T, 1))."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_ref(q, scale, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def roundtrip_ref(x):
+    q, s = quantize_ref(x)
+    return dequantize_ref(q, s, x.dtype)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import jax
+
+
+def flash_attention_ref(q, k, v, causal=True):
+    """q: (B, H, S, D); k, v: (B, KV, T, D) with H % KV == 0.
+    Returns (B, H, S, D).  fp32 softmax, output in q.dtype."""
+    b, h, s, d = q.shape
+    kv, t = k.shape[1], k.shape[2]
+    rep = h // kv
+    qg = q.reshape(b, kv, rep, s, d).astype(jnp.float32)
+    logits = jnp.einsum("bgrsd,bgtd->bgrst", qg,
+                        k.astype(jnp.float32)) / math.sqrt(d)
+    if causal:
+        mask = jnp.arange(t)[None, :] <= jnp.arange(s)[:, None] + (t - s)
+        logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgrst,bgtd->bgrsd", w, v.astype(jnp.float32))
+    return out.reshape(b, h, s, d).astype(q.dtype)

@@ -1,0 +1,9 @@
+"""Oracle for the SSD kernel: the pure-jnp chunked SSD from the model layer."""
+
+from repro.models.mamba import ssd_chunked
+
+
+def ssd_ref(x, dt, A, B, C, chunk):
+    """x: (b,l,h,p)  dt: (b,l,h)  A: (h,)  B,C: (b,l,g,n).
+    Returns (y (b,l,h,p), final_state (b,h,p,n))."""
+    return ssd_chunked(x, dt, A, B, C, chunk)

@@ -1,0 +1,95 @@
+"""Production mesh + logical-axis -> PartitionSpec rules.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state).  Single pod: (16, 16) over ("data", "model") — 256 v5e
+chips.  Multi-pod: (2, 16, 16) over ("pod", "data", "model") — 512 chips;
+the pod axis carries pure data parallelism (and FSDP for the very largest
+params, see RULES).
+
+Sharding rules map the *logical* axis names attached by every ``*_init`` in
+repro.models to mesh axes, with two safety conditions enforced per leaf:
+  * a mesh axis is used at most once per PartitionSpec,
+  * a dim is sharded only if its size is divisible by the axis size
+    (e.g. MiniCPM's deliberately odd 122753 vocab falls back to replicated).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Axes carrying batch/data parallelism."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+# logical axis -> candidate mesh axes, in preference order.  The first
+# candidate that is free (not already used in this spec) and divides the
+# dim size wins; otherwise the dim is replicated.
+RULES: dict[str, tuple[str, ...]] = {
+    "vocab": ("model",),
+    "ff": ("model",),
+    "heads_flat": ("model",),
+    "experts": ("model",),
+    "inner_proj": ("model",),
+    "inner": ("model",),
+    "embed": ("data", "pod"),        # FSDP over data (and pod when free)
+    "frontend": (),
+    "kv_flat": (),                   # kv heads < model axis: replicate
+    "experts_r": (),
+    "heads": (),
+    "layers": (),                    # scan-stacked layer dim
+    "chan": (), "chan_in": (), "classes": (),
+    "clients": ("data",),            # stacked per-client fronts (SFLv3)
+}
+
+
+def spec_for(axes: tuple, shape: tuple, mesh: Mesh) -> P:
+    used: set[str] = set()
+    out = []
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for ax_name, dim in zip(axes, shape):
+        choice = None
+        if ax_name is not None:
+            for cand in RULES.get(ax_name, ()):
+                if cand in sizes and cand not in used and \
+                        dim % sizes[cand] == 0:
+                    choice = cand
+                    used.add(cand)
+                    break
+        out.append(choice)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def tree_shardings(axes_tree: Any, shape_tree: Any, mesh: Mesh):
+    """Build a NamedSharding pytree from the logical-axes tree produced by
+    model init and a matching ShapeDtypeStruct tree."""
+    is_axes_leaf = lambda v: isinstance(v, tuple) and all(
+        isinstance(x, (str, type(None))) for x in v)
+
+    def one(axes, sds):
+        return NamedSharding(mesh, spec_for(axes, sds.shape, mesh))
+
+    return jax.tree.map(one, axes_tree, shape_tree, is_leaf=is_axes_leaf)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def batch_sharding(mesh: Mesh, rank: int, batch_dim: int = 0):
+    spec = [None] * rank
+    spec[batch_dim] = dp_axes(mesh)
+    return NamedSharding(mesh, P(*spec))

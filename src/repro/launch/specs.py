@@ -1,0 +1,127 @@
+"""ShapeDtypeStruct input specs + NamedShardings per (arch × input shape).
+
+Nothing here allocates device memory: FULL configs exist only as abstract
+shapes (the shannon/kernels pattern).  ``decode_*`` shapes include the KV/SSM
+cache tree; its sharding policy is the production one:
+
+  * decode_32k : cache batch -> data(/pod), cache seq -> model
+  * long_500k  : batch==1 (unshardable) -> cache seq over ALL mesh axes
+  * sliding-window archs allocate only window-sized ring caches
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES
+from repro.launch import mesh as MESH
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg, shape_name: str, mesh):
+    sh = INPUT_SHAPES[shape_name]
+    b, s = sh["global_batch"], sh["seq_len"]
+    dp = MESH.dp_axes(mesh)
+    batch = {"tokens": sds((b, s + 1), jnp.int32)}
+    shardings = {"tokens": NamedSharding(mesh, P(dp, None))}
+    if cfg.frontend is not None:
+        batch["frontend_emb"] = sds((b, cfg.frontend_tokens,
+                                     cfg.frontend_dim), jnp.bfloat16)
+        shardings["frontend_emb"] = NamedSharding(mesh, P(dp, None, None))
+    return batch, shardings
+
+
+def prefill_batch_specs(cfg, shape_name: str, mesh):
+    sh = INPUT_SHAPES[shape_name]
+    b, s = sh["global_batch"], sh["seq_len"]
+    dp = MESH.dp_axes(mesh)
+    batch = {"tokens": sds((b, s), jnp.int32)}
+    shardings = {"tokens": NamedSharding(mesh, P(dp, None))}
+    if cfg.frontend is not None:
+        batch["frontend_emb"] = sds((b, cfg.frontend_tokens,
+                                     cfg.frontend_dim), jnp.bfloat16)
+        shardings["frontend_emb"] = NamedSharding(mesh, P(dp, None, None))
+    return batch, shardings
+
+
+def decode_token_specs(shape_name: str, mesh):
+    sh = INPUT_SHAPES[shape_name]
+    b = sh["global_batch"]
+    dp = MESH.dp_axes(mesh)
+    bspec = dp if b % _axes_size(mesh, dp) == 0 else None
+    tokens = sds((b, 1), jnp.int32)
+    positions = sds((b, 1), jnp.int32)
+    shd = NamedSharding(mesh, P(bspec, None))
+    return (tokens, positions), (shd, shd)
+
+
+def _axes_size(mesh, axes) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        n *= sizes[a]
+    return n
+
+
+def cache_specs(model, shape_name: str, mesh, dtype=jnp.bfloat16,
+                as_pspec: bool = False):
+    """Abstract cache tree + shardings for a decode shape."""
+    sh = INPUT_SHAPES[shape_name]
+    b, s = sh["global_batch"], sh["seq_len"]
+    if model.cfg.frontend is not None:
+        s += model.cfg.frontend_tokens          # prefix slots in the cache
+    dp = MESH.dp_axes(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_n = _axes_size(mesh, dp)
+    batch_shardable = b % dp_n == 0
+    bspec = dp if batch_shardable else None
+    # sequence dim: model axis normally; everything when batch unshardable
+    seq_axes = ("model",) if batch_shardable else tuple(mesh.axis_names)
+
+    cache_shapes = jax.eval_shape(
+        lambda: model.cache_init(b, s, dtype=dtype))
+
+    # run caches carry a leading stacked-layer dim; shared-attn caches do
+    # not — distinguish by rank (k/v: 5 vs 4, pos: 3 vs 2, ...)
+    _BASE_RANK = {"k": 4, "v": 4, "pos": 2, "conv": 3, "ssm": 4, "index": 0}
+
+    def leaf_spec(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        rank = len(leaf.shape)
+        stacked = 1 if rank == _BASE_RANK.get(name, rank) + 1 else 0
+        lead = (None,) * stacked
+
+        def fits(dim, axes):
+            return dim % _axes_size(mesh, axes) == 0
+
+        if name in ("k", "v"):
+            bdim, tdim = leaf.shape[stacked], leaf.shape[stacked + 1]
+            tspec = seq_axes if fits(tdim, seq_axes) else None
+            return P(*lead, bspec, tspec)
+        if name == "pos":
+            tdim = leaf.shape[stacked + 1]
+            tspec = seq_axes if fits(tdim, seq_axes) else None
+            return P(*lead, bspec, tspec)
+        if name == "conv":
+            cdim = leaf.shape[-1]
+            cspec = ("model",) if cdim % sizes["model"] == 0 else None
+            return P(*lead, bspec, None, cspec)
+        if name == "ssm":
+            hdim = leaf.shape[stacked + 1]
+            hspec = ("model",) if hdim % sizes["model"] == 0 else None
+            return P(*lead, bspec, hspec)
+        return P()
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    pspecs = jax.tree_util.tree_unflatten(
+        treedef, [leaf_spec(path, leaf) for path, leaf in flat])
+    if as_pspec:
+        return cache_shapes, pspecs
+    return cache_shapes, jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspecs,
+        is_leaf=lambda v: isinstance(v, P))

@@ -1,0 +1,114 @@
+"""Mesh-aware train steps.
+
+``make_sflv3_train_step`` is the paper's technique as a first-class mesh
+feature (DESIGN.md §2): every data-parallel group is a virtual hospital —
+client (front) segments are stacked along a ``clients`` axis sharded over
+``data`` and are NEVER synchronized; the server (middle) segment is shared,
+its gradient is the average over clients (SplitFedv3, Algorithm 1).  The
+cut-layer activation transfer of the paper is the resharding collective at
+the front->middle boundary, measured by the roofline's collective term.
+
+``make_plain_train_step`` is the centralized baseline on the same mesh.
+
+Optional ``compress_boundary`` applies the int8 Pallas link compressor
+(beyond-paper optimization, repro.kernels.act_compress).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim as O
+
+
+def init_sflv3_params(model, key, n_clients: int):
+    """Returns ({"fronts": stacked front, "middle": middle}, axes_tree)."""
+    kf, km = jax.random.split(key)
+
+    def front_init(k):
+        p, _ = model.init(k)
+        return p["front"]
+
+    fronts = jax.vmap(front_init)(jax.random.split(kf, n_clients))
+    full, axes = model.init(km)
+    f_axes = jax.tree.map(lambda a: ("clients",) + tuple(a), axes["front"],
+                          is_leaf=lambda v: isinstance(v, tuple))
+    return ({"fronts": fronts, "middle": full["middle"]},
+            {"fronts": f_axes, "middle": axes["middle"]})
+
+
+def make_sflv3_train_step(model, opt: O.Optimizer, n_clients: int,
+                          compress: bool = False):
+    if compress:
+        # int8 cut-layer link (beyond-paper; Pallas kernel on TPU, jnp ref
+        # under SPMD lowering on CPU — see repro.kernels.act_compress)
+        import jax as _jax
+        if _jax.default_backend() == "tpu":
+            from repro.kernels.act_compress.ops import compress_boundary
+        else:
+            from repro.kernels.act_compress.ref import roundtrip_ref
+
+            @jax.custom_vjp
+            def compress_boundary(x):
+                return roundtrip_ref(x)
+
+            compress_boundary.defvjp(
+                lambda x: (roundtrip_ref(x), None),
+                lambda _, g: (g,))
+        boundary_fn = compress_boundary
+    else:
+        boundary_fn = None
+
+    def loss_fn(params, batch):
+        toks = batch["tokens"]
+        c = n_clients
+        toks = toks.reshape(c, toks.shape[0] // c, toks.shape[1])
+        fe = batch.get("frontend_emb")
+        if fe is not None:
+            fe = fe.reshape(c, fe.shape[0] // c, *fe.shape[1:])
+
+        def per_client(front, t, f):
+            b = {"tokens": t}
+            if f is not None:
+                b["frontend_emb"] = f
+            full = {"front": front, "middle": params["middle"]}
+            return model.loss(full, b, train=True, boundary_fn=boundary_fn)
+
+        if fe is None:
+            losses = jax.vmap(lambda fr, t: per_client(fr, t, None))(
+                params["fronts"], toks)
+        else:
+            losses = jax.vmap(per_client)(params["fronts"], toks, fe)
+        return losses.mean()
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        return O.apply_updates(params, updates), opt_state, loss
+
+    return train_step
+
+
+def make_plain_train_step(model, opt: O.Optimizer):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch, train=True))(params)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        return O.apply_updates(params, updates), opt_state, loss
+    return train_step
+
+
+def get_axes_tree(init_fn, key):
+    """Capture the logical-axes tree without materializing params."""
+    box = {}
+
+    def f(k):
+        p, a = init_fn(k)
+        box["a"] = a
+        return p
+
+    shapes = jax.eval_shape(f, key)
+    return shapes, box["a"]

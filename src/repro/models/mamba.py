@@ -1,0 +1,236 @@
+"""Mamba2 block via SSD (state-space duality, arXiv:2405.21060).
+
+Chunked algorithm: the sequence is split into chunks of Q tokens; the
+quadratic intra-chunk term is batched matmuls (MXU-friendly) and the
+inter-chunk state recurrence is a ``lax.scan`` carrying (H, P, N) states.
+``repro.kernels.ssd_scan`` holds the Pallas TPU twin of the intra-chunk
+compute; this module is the pure-jnp implementation used as its oracle and
+as the CPU path.
+
+Decode path: O(1) per token — state update S <- dA * S + dt*x (x) B, output
+y = C . S, matching the recurrent form of SSD exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_model: int
+    d_state: int = 128          # N
+    head_dim: int = 64          # P
+    expand: int = 2
+    n_groups: int = 1           # G
+    d_conv: int = 4
+    chunk: int = 128            # Q (SSD chunk length)
+    conv_gather: bool = True    # window-gather conv fuses better than
+                                # shifted slices (measured, §Perf H2)
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+def mamba_init(key, cfg: MambaConfig, dtype=jnp.float32):
+    kin, kconv, kdt, ka, kout, kn = jax.random.split(key, 6)
+    d, di, h, g, n = (cfg.d_model, cfg.d_inner, cfg.n_heads,
+                      cfg.n_groups, cfg.d_state)
+    proj_out = 2 * di + 2 * g * n + h        # z, x, B, C, dt
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "in_proj": L._normal(kin, (d, proj_out), s, dtype),
+        "conv_w": L._normal(kconv, (cfg.d_conv, cfg.conv_dim),
+                            1.0 / math.sqrt(cfg.d_conv), dtype),
+        "conv_b": jnp.zeros((cfg.conv_dim,), dtype),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        # A in (-exp range); stored as log for positivity
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype),
+        "out_proj": L._normal(kout, (di, d), 1.0 / math.sqrt(di), dtype),
+    }
+    a = {
+        "in_proj": ("embed", "inner_proj"),
+        "conv_w": (None, "inner_proj"),
+        "conv_b": ("inner_proj",),
+        "dt_bias": ("heads",),
+        "A_log": ("heads",),
+        "D": ("heads",),
+        "norm_scale": ("inner",),
+        "out_proj": ("inner", "embed"),
+    }
+    return p, a
+
+
+def _segsum(log_a):
+    """log_a: (..., Q).  Returns (..., Q, Q) with S[i,j] = sum_{j<m<=i} log_a[m]
+    for j<=i, -inf above diagonal."""
+    q = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]         # sum_{j<m<=i}
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk, init_state=None):
+    """SSD forward.
+    x: (b, l, h, p)   dt: (b, l, h) (post-softplus, >0)
+    A: (h,) (positive; decay = exp(-dt*A))   B, C: (b, l, g, n)
+    Returns y: (b, l, h, p), final_state: (b, h, p, n).
+    """
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    q = chunk
+    assert l % q == 0, f"seq {l} not divisible by chunk {q}"
+    nc = l // q
+    rep = h // g
+
+    xb = x * dt[..., None]                            # discretized input
+    log_a = (-dt * A).astype(jnp.float32)             # (b, l, h) log decay
+    xc = xb.reshape(b, nc, q, h, p)
+    Bc = B.reshape(b, nc, q, g, n)
+    Cc = C.reshape(b, nc, q, g, n)
+    lac = log_a.reshape(b, nc, q, h)
+
+    Brep = jnp.repeat(Bc, rep, axis=3).astype(jnp.float32)   # (b,nc,q,h,n)
+    Crep = jnp.repeat(Cc, rep, axis=3).astype(jnp.float32)   # (b,nc,q,h,n)
+
+    # --- intra-chunk (quadratic within chunk; Pallas kernel twin) ---
+    seg = _segsum(lac.transpose(0, 1, 3, 2))          # (b, nc, h, q, q)
+    Lmat = jnp.exp(seg)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Crep, Brep)
+    y_intra = jnp.einsum("bchqk,bchqk,bckhp->bcqhp",
+                         scores, Lmat, xc.astype(jnp.float32))
+
+    # --- chunk summary states ---
+    a_last = jnp.exp(lac.sum(axis=2))                 # (b, nc, h) total decay
+    decay_to_end = jnp.exp(lac.sum(axis=2)[:, :, None, :] -
+                           jnp.cumsum(lac, axis=2))   # (b, nc, q, h)
+    states = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn",
+                        decay_to_end, Brep,
+                        xc.astype(jnp.float32))       # (b, nc, h, p, n)
+
+    # --- inter-chunk recurrence ---
+    def body(s, inp):
+        st, al = inp                                  # (b,h,p,n), (b,h)
+        s_new = s * al[:, :, None, None] + st
+        return s_new, s                               # emit state BEFORE chunk
+
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    final, prev_states = jax.lax.scan(
+        body, s0, (states.transpose(1, 0, 2, 3, 4), a_last.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (b, nc, h, p, n)
+
+    # --- inter-chunk output ---
+    decay_from_start = jnp.exp(jnp.cumsum(lac, axis=2))  # (b, nc, q, h)
+    y_inter = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp",
+                         Crep, prev_states, decay_from_start)
+    y = (y_intra + y_inter).reshape(b, l, h, p)
+    return y.astype(x.dtype), final
+
+
+def mamba_apply(p, cfg: MambaConfig, x, cache=None, use_pallas=False):
+    """x: (B, S, D).  cache: None or {"conv": (B, d_conv-1, conv_dim),
+    "ssm": (B, H, P, N)} for single-token decode.  Returns (y, new_cache)."""
+    b, s, d = x.shape
+    di, h, g, n, pd = (cfg.d_inner, cfg.n_heads, cfg.n_groups,
+                       cfg.d_state, cfg.head_dim)
+    proj = x @ p["in_proj"].astype(x.dtype)           # (B,S,2di+2gn+h)
+    z, xbc, dt_raw = jnp.split(proj, [di, di + cfg.conv_dim], axis=-1)
+    xbc_in = xbc
+
+    if cache is None:
+        # causal depthwise conv via padding
+        pad = jnp.zeros((b, cfg.d_conv - 1, cfg.conv_dim), xbc.dtype)
+        xpad = jnp.concatenate([pad, xbc], axis=1)
+        new_conv_state = xpad[:, -(cfg.d_conv - 1):, :] if cfg.d_conv > 1 else None
+    else:
+        xpad = jnp.concatenate([cache["conv"].astype(xbc.dtype), xbc], axis=1)
+        new_conv_state = xpad[:, -(cfg.d_conv - 1):, :]
+
+    if cfg.conv_gather:
+        # legacy: materializes a (B, S, d_conv, C) window gather
+        idx = jnp.arange(s)[:, None] + jnp.arange(cfg.d_conv)[None, :]
+        win = xpad[:, idx, :]
+        xbc = jax.nn.silu(jnp.einsum("bskc,kc->bsc", win,
+                                     p["conv_w"].astype(xbc.dtype))
+                          + p["conv_b"].astype(xbc.dtype))
+    else:
+        # depthwise causal conv as d_conv shifted scaled slices — avoids
+        # the 4x activation blow-up of the window gather (§Perf)
+        cw = p["conv_w"].astype(xbc.dtype)
+        acc = xpad[:, :s, :] * cw[0]
+        for k in range(1, cfg.d_conv):
+            acc = acc + xpad[:, k:k + s, :] * cw[k]
+        xbc = jax.nn.silu(acc + p["conv_b"].astype(xbc.dtype))
+
+    xin, B_, C_ = jnp.split(xbc, [di, di + g * n], axis=-1)
+    xin = xin.reshape(b, s, h, pd)
+    B_ = B_.reshape(b, s, g, n)
+    C_ = C_.reshape(b, s, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = jnp.exp(p["A_log"])                           # (H,) positive
+
+    if cache is None or s > 1:
+        # train, or (chained) prefill with an incoming cache state
+        s0 = cache["ssm"] if cache is not None else None
+        if use_pallas and s % cfg.chunk == 0 and s0 is None:
+            from repro.kernels.ssd_scan import ops as ssd_ops
+            y, final = ssd_ops.ssd(xin, dt, A, B_, C_, cfg.chunk)
+        else:
+            ch = cfg.chunk if s % cfg.chunk == 0 else _best_chunk(s)
+            y, final = ssd_chunked(xin, dt, A, B_, C_, ch, init_state=s0)
+        new_ssm = final
+    else:
+        # recurrent decode: S <- exp(-dt A) S + dt x B^T ; y = C . S
+        S = cache["ssm"]                              # (B,H,P,N)
+        da = jnp.exp(-dt[:, 0, :] * A)                # (B,H)
+        Brep = jnp.repeat(B_, h // g, axis=2)[:, 0]   # (B,H,N)
+        Crep = jnp.repeat(C_, h // g, axis=2)[:, 0]   # (B,H,N)
+        xd = (xin[:, 0] * dt[:, 0, :, None]).astype(jnp.float32)  # (B,H,P)
+        S = S * da[:, :, None, None] + jnp.einsum("bhp,bhn->bhpn", xd,
+                                                  Brep.astype(jnp.float32))
+        y = jnp.einsum("bhn,bhpn->bhp", Crep.astype(jnp.float32), S)
+        y = y[:, None]                                # (B,1,H,P)
+        new_ssm = S
+
+    y = y + xin.astype(y.dtype) * p["D"][:, None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+    # gated RMSNorm (mamba2's norm-before-out-proj)
+    y = L.rmsnorm_apply({"scale": p["norm_scale"]}, y * jax.nn.silu(z))
+    out = y @ p["out_proj"].astype(x.dtype)
+    if new_conv_state is None:
+        new_conv_state = jnp.zeros((b, 0, cfg.conv_dim), x.dtype)
+    return out, {"conv": new_conv_state, "ssm": new_ssm}
+
+
+def _best_chunk(s: int) -> int:
+    for c in (128, 64, 32, 16, 8, 4, 2, 1):
+        if s % c == 0:
+            return c
+    return 1
+
+
+def mamba_cache_init(cfg: MambaConfig, batch: int, dtype=jnp.bfloat16):
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.conv_dim), dtype),
+        "ssm": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state),
+                         jnp.float32),
+    }

@@ -1,0 +1,121 @@
+"""Mixture-of-Experts layer (GShard-style capacity dispatch).
+
+Design notes (see DESIGN.md §4/§5):
+* top-k routing with a fixed per-expert capacity, expressed as dense one-hot
+  einsums — fully SPMD-shardable (expert dim -> 'model' mesh axis).
+* To bound the transient dispatch tensor on trillion-param configs
+  (kimi-k2: 384 experts, 1M tokens/step), tokens are processed in fixed-size
+  chunks via ``lax.scan``: the (chunk, E, cap) one-hot stays a few MB while
+  FLOPs/bytes accounting remains exact.
+* Aux losses: load-balance (Switch) + router z-loss, returned for logging.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int               # per-expert hidden dim
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    chunk: int = 1024       # tokens per dispatch chunk
+    n_shared_experts: int = 0   # dense "shared expert" (DeepSeek/Kimi style)
+
+
+def moe_init(key, cfg: MoEConfig, dtype=jnp.float32):
+    kr, k1, k2, k3, ks = jax.random.split(key, 5)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "router": L._normal(kr, (d, e), s, jnp.float32),
+        "wi": L._normal(k1, (e, d, f), s, dtype),
+        "wg": L._normal(k2, (e, d, f), s, dtype),
+        "wo": L._normal(k3, (e, f, d), 1.0 / math.sqrt(f), dtype),
+    }
+    a = {
+        "router": ("embed", "experts_r"),
+        "wi": ("experts", "embed", "ff"),
+        "wg": ("experts", "embed", "ff"),
+        "wo": ("experts", "ff", "embed"),
+    }
+    if cfg.n_shared_experts:
+        sp, sa = L.swiglu_init(ks, d, f * cfg.n_shared_experts, dtype=dtype)
+        p["shared"], a["shared"] = sp, sa
+    return p, a
+
+
+def _capacity(chunk_tokens: int, cfg: MoEConfig) -> int:
+    cap = int(math.ceil(chunk_tokens * cfg.top_k / cfg.n_experts
+                        * cfg.capacity_factor))
+    return max(cap, 1)
+
+
+def _dispatch_chunk(p, cfg: MoEConfig, x):
+    """x: (T, D) one chunk. Returns (y, aux) with y: (T, D)."""
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(t, cfg)
+
+    logits = (x.astype(jnp.float32) @ p["router"])            # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)                      # (T, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(topi, e, dtype=jnp.float32)        # (T, k, E)
+    # position of each (token, slot) within its expert queue, token-major
+    flat = onehot.reshape(t * k, e)
+    pos = jnp.cumsum(flat, axis=0) - flat                      # (T*k, E)
+    pos = (pos * flat).sum(-1).reshape(t, k).astype(jnp.int32)  # (T, k)
+    in_cap = (pos < cap)
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=jnp.float32) * in_cap[..., None]
+    # dispatch: (T, E, cap)
+    dispatch = jnp.einsum("tke,tkc->tec", onehot, pos_oh)
+    combine = jnp.einsum("tke,tkc,tk->tec", onehot, pos_oh, topv)
+
+    xin = jnp.einsum("tec,td->ecd", dispatch.astype(x.dtype), x)   # (E,cap,D)
+    h = (jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, p["wg"].astype(x.dtype)))
+         * jnp.einsum("ecd,edf->ecf", xin, p["wi"].astype(x.dtype)))
+    xout = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(x.dtype))  # (E,cap,D)
+    y = jnp.einsum("tec,ecd->td", combine.astype(x.dtype), xout)
+
+    # aux losses
+    me = probs.mean(0)                                         # (E,)
+    ce = onehot.sum(1).mean(0)                                 # fraction routed
+    lb_loss = e * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    dropped = 1.0 - in_cap.mean()
+    return y, {"lb_loss": lb_loss, "z_loss": z_loss, "dropped": dropped}
+
+
+def moe_apply(p, cfg: MoEConfig, x):
+    """x: (B, S, D) -> (y, aux)."""
+    b, s, d = x.shape
+    tok = x.reshape(b * s, d)
+    t = tok.shape[0]
+    chunk = min(cfg.chunk, t)
+    n_chunks = (t + chunk - 1) // chunk
+    pad = n_chunks * chunk - t
+    if pad:
+        tok = jnp.pad(tok, ((0, pad), (0, 0)))
+    tok = tok.reshape(n_chunks, chunk, d)
+
+    def body(_, xc):
+        y, aux = _dispatch_chunk(p, cfg, xc)
+        return None, (y, aux)
+
+    _, (ys, auxs) = jax.lax.scan(body, None, tok)
+    y = ys.reshape(n_chunks * chunk, d)[:t].reshape(b, s, d)
+    aux = jax.tree.map(jnp.mean, auxs)
+    if cfg.n_shared_experts:
+        y = y + L.swiglu_apply(p["shared"], x)
+    return y, aux

@@ -1,0 +1,470 @@
+"""Decoder-only transformer family covering all assigned architectures.
+
+The model is represented as an ordered list of **segments** — the unit the
+paper's cut-layer partitioning (repro.core.partition) operates on:
+
+    front  : embedding (+ modality projector) + layers[0:cut]
+    middle : layers[cut:L] + final norm (+ LM head in label-sharing mode)
+    tail   : LM head (only in the non-label-sharing / U-shaped mode)
+
+Within a segment, consecutive same-kind layers are grouped into **runs**
+scanned with ``jax.lax.scan`` over stacked params, which keeps the HLO small
+enough to lower 126-layer × 512-device programs on one CPU.  Layer kinds:
+``dense`` (attn+SwiGLU), ``moe`` (attn+MoE), ``mamba`` (Mamba2/SSD) and
+``shared`` (zamba2-style shared attention block — one param set, applied at
+several depths, each application with its own KV cache).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MOE
+
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    d_ff: int = 0
+    vocab_size: int = 32000
+    head_dim: int = 0               # 0 => d_model // n_heads
+    rope_theta: float = 500000.0
+    sliding_window: int | None = None
+    chunk_kv: int = 0               # flash-style jnp chunking threshold
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    first_k_dense: int = 0          # leading dense layers (Kimi-K2 style)
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    moe_chunk: int = 1024
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_n_groups: int = 1
+    ssm_chunk: int = 128
+    hybrid_attn_every: int = 0      # zamba2: shared attn block every k layers
+    # perf variants (see EXPERIMENTS.md §Perf)
+    vocab_pad_to: int = 0           # pad vocab to a multiple (shardability)
+    mamba_conv_gather: bool = True   # gather conv (fuses better; §Perf H2)
+    # modality frontend (stubbed per assignment)
+    frontend: str | None = None     # None | "vision" | "audio"
+    frontend_dim: int = 1024
+    frontend_tokens: int = 256      # patches / audio frames per sample
+    # split-learning defaults (the paper's technique)
+    cut_layer: int = 4
+    # numerics / training
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    # citation for the registry table
+    source: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def padded_vocab(self) -> int:
+        if not self.vocab_pad_to:
+            return self.vocab_size
+        m = self.vocab_pad_to
+        return ((self.vocab_size + m - 1) // m) * m
+
+    def attn_config(self) -> L.AttnConfig:
+        return L.AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, head_dim=self.resolved_head_dim,
+            rope_theta=self.rope_theta, sliding_window=self.sliding_window,
+            chunk_kv=self.chunk_kv)
+
+    def mamba_config(self) -> M.MambaConfig:
+        return M.MambaConfig(
+            d_model=self.d_model, d_state=self.ssm_state,
+            head_dim=self.ssm_head_dim, n_groups=self.ssm_n_groups,
+            chunk=self.ssm_chunk, conv_gather=self.mamba_conv_gather)
+
+    def moe_config(self) -> MOE.MoEConfig:
+        return MOE.MoEConfig(
+            d_model=self.d_model, d_ff=self.d_ff, n_experts=self.n_experts,
+            top_k=self.top_k, capacity_factor=self.capacity_factor,
+            chunk=self.moe_chunk, n_shared_experts=self.n_shared_experts)
+
+
+def layer_kinds(cfg: ModelConfig) -> list[str]:
+    """Kind of each of the L layers, in depth order."""
+    kinds = []
+    for i in range(cfg.n_layers):
+        if cfg.arch_type in ("ssm",):
+            kinds.append("mamba")
+        elif cfg.arch_type == "hybrid":
+            kinds.append("mamba")
+            if cfg.hybrid_attn_every and (i + 1) % cfg.hybrid_attn_every == 0:
+                kinds.append("shared")
+        elif cfg.n_experts and i >= cfg.first_k_dense:
+            kinds.append("moe")
+        else:
+            kinds.append("dense")
+    return kinds
+
+
+@dataclasses.dataclass(frozen=True)
+class RunSpec:
+    kind: str
+    count: int
+    run_id: int
+
+
+def group_runs(kinds: list[str]) -> list[RunSpec]:
+    runs, rid = [], 0
+    for k in kinds:
+        if runs and runs[-1].kind == k and k != "shared":
+            runs[-1] = RunSpec(k, runs[-1].count + 1, runs[-1].run_id)
+        else:
+            runs.append(RunSpec(k, 1, rid))
+            rid += 1
+    return runs
+
+
+# ---------------------------------------------------------------------------
+# per-layer blocks
+# ---------------------------------------------------------------------------
+
+def _dense_block_init(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    p, a = {}, {}
+    p["ln1"], a["ln1"] = L.rmsnorm_init(cfg.d_model, dtype)
+    p["attn"], a["attn"] = L.attention_init(k1, cfg.attn_config(), dtype)
+    p["ln2"], a["ln2"] = L.rmsnorm_init(cfg.d_model, dtype)
+    p["mlp"], a["mlp"] = L.swiglu_init(k2, cfg.d_model, cfg.d_ff, dtype)
+    return p, a
+
+
+def _dense_block_apply(p, cfg, x, positions, cache, use_pallas=False):
+    h, new_cache = L.attention_apply(
+        p["attn"], cfg.attn_config(), L.rmsnorm_apply(p["ln1"], x),
+        positions, cache, use_pallas=use_pallas)
+    x = x + h
+    x = x + L.swiglu_apply(p["mlp"], L.rmsnorm_apply(p["ln2"], x))
+    return x, new_cache, jnp.zeros((), jnp.float32)
+
+
+def _moe_block_init(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    p, a = {}, {}
+    p["ln1"], a["ln1"] = L.rmsnorm_init(cfg.d_model, dtype)
+    p["attn"], a["attn"] = L.attention_init(k1, cfg.attn_config(), dtype)
+    p["ln2"], a["ln2"] = L.rmsnorm_init(cfg.d_model, dtype)
+    p["moe"], a["moe"] = MOE.moe_init(k2, cfg.moe_config(), dtype)
+    return p, a
+
+
+def _moe_block_apply(p, cfg, x, positions, cache, use_pallas=False):
+    h, new_cache = L.attention_apply(
+        p["attn"], cfg.attn_config(), L.rmsnorm_apply(p["ln1"], x),
+        positions, cache, use_pallas=use_pallas)
+    x = x + h
+    y, aux = MOE.moe_apply(p["moe"], cfg.moe_config(),
+                           L.rmsnorm_apply(p["ln2"], x))
+    x = x + y
+    aux_loss = 0.01 * aux["lb_loss"] + 0.001 * aux["z_loss"]
+    return x, new_cache, aux_loss.astype(jnp.float32)
+
+
+def _mamba_block_init(key, cfg: ModelConfig, dtype):
+    p, a = {}, {}
+    p["ln"], a["ln"] = L.rmsnorm_init(cfg.d_model, dtype)
+    p["mamba"], a["mamba"] = M.mamba_init(key, cfg.mamba_config(), dtype)
+    return p, a
+
+
+def _mamba_block_apply(p, cfg, x, positions, cache, use_pallas=False):
+    h, new_cache = M.mamba_apply(p["mamba"], cfg.mamba_config(),
+                                 L.rmsnorm_apply(p["ln"], x), cache,
+                                 use_pallas=use_pallas)
+    return x + h, new_cache, jnp.zeros((), jnp.float32)
+
+
+_BLOCK_INIT = {"dense": _dense_block_init, "moe": _moe_block_init,
+               "mamba": _mamba_block_init, "shared": _dense_block_init}
+_BLOCK_APPLY = {"dense": _dense_block_apply, "moe": _moe_block_apply,
+                "mamba": _mamba_block_apply, "shared": _dense_block_apply}
+
+
+def _block_cache_init(kind, cfg: ModelConfig, batch, max_len, dtype):
+    if kind in ("dense", "moe", "shared"):
+        if cfg.sliding_window:
+            # ring buffer: a sliding-window cache never needs more than the
+            # window (this is what qualifies llama4-scout for long_500k)
+            max_len = min(max_len, cfg.sliding_window)
+        return L.attention_cache_init(cfg.attn_config(), batch, max_len, dtype)
+    return M.mamba_cache_init(cfg.mamba_config(), batch, dtype)
+
+
+# ---------------------------------------------------------------------------
+# runs (scanned stacks of same-kind layers)
+# ---------------------------------------------------------------------------
+
+def _run_init(key, spec: RunSpec, cfg: ModelConfig, dtype):
+    if spec.kind == "shared":       # params live in the segment's shared slot
+        return None, None
+    keys = jax.random.split(key, spec.count)
+    init = _BLOCK_INIT[spec.kind]
+    p, a = jax.vmap(lambda k: init(k, cfg, dtype)[0])(keys), None
+    _, a = init(keys[0], cfg, dtype)
+    a = jax.tree.map(lambda ax: ("layers",) + tuple(ax), a,
+                     is_leaf=lambda v: isinstance(v, tuple))
+    return p, a
+
+
+def _run_apply(run_p, shared_p, spec: RunSpec, cfg: ModelConfig, x,
+               positions, cache, use_pallas=False, remat=False):
+    apply = _BLOCK_APPLY[spec.kind]
+    if spec.kind == "shared":
+        x, new_cache, aux = apply(shared_p, cfg, x, positions, cache,
+                                  use_pallas)
+        return x, new_cache, aux
+
+    def body(carry, layer):
+        xc, aux = carry
+        lp, lc = layer
+        xc, nc, a = apply(lp, cfg, xc, positions, lc, use_pallas)
+        return (xc, aux + a), nc
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    (x, aux), new_cache = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (run_p, cache))
+    return x, new_cache, aux
+
+
+def _run_cache_init(spec: RunSpec, cfg: ModelConfig, batch, max_len, dtype):
+    one = _block_cache_init(spec.kind, cfg, batch, max_len, dtype)
+    if spec.kind == "shared":
+        return one
+    return jax.tree.map(
+        lambda v: jnp.broadcast_to(v, (spec.count,) + v.shape).copy(), one)
+
+
+# ---------------------------------------------------------------------------
+# segments
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SegmentDef:
+    name: str                         # front | middle | tail
+    runs: tuple[RunSpec, ...]         # layer runs inside this segment
+    has_embed: bool = False
+    has_frontend: bool = False
+    has_final_norm: bool = False
+    has_head: bool = False
+    has_shared: bool = False          # owns the shared-attn param set
+
+
+def _segment_init(key, seg: SegmentDef, cfg: ModelConfig):
+    dtype = cfg.param_dtype
+    p, a = {}, {}
+    keys = jax.random.split(key, len(seg.runs) + 4)
+    if seg.has_embed:
+        p["embed"], a["embed"] = L.embedding_init(keys[-1], cfg.padded_vocab,
+                                                  cfg.d_model, dtype)
+    if seg.has_frontend:
+        p["projector"], a["projector"] = L.dense_init(
+            keys[-2], cfg.frontend_dim, cfg.d_model,
+            axes=("frontend", "embed"), dtype=dtype)
+    if seg.has_shared:
+        p["shared_block"], a["shared_block"] = _dense_block_init(
+            keys[-3], cfg, dtype)
+    for i, spec in enumerate(seg.runs):
+        if spec.kind == "shared":
+            continue
+        p[f"run_{spec.run_id}"], a[f"run_{spec.run_id}"] = _run_init(
+            keys[i], spec, cfg, dtype)
+    if seg.has_final_norm:
+        p["final_norm"], a["final_norm"] = L.rmsnorm_init(cfg.d_model, dtype)
+    if seg.has_head:
+        p["head"], a["head"] = L.dense_init(
+            keys[-4], cfg.d_model, cfg.padded_vocab,
+            axes=("embed", "vocab"), dtype=dtype)
+    return p, a
+
+
+def _segment_cache_init(seg: SegmentDef, cfg: ModelConfig, batch, max_len,
+                        dtype=jnp.bfloat16):
+    return {f"cache_{s.run_id}": _run_cache_init(s, cfg, batch, max_len, dtype)
+            for s in seg.runs}
+
+
+def _segment_apply(p, seg: SegmentDef, cfg: ModelConfig, x, ctx):
+    """x: token ids (B,S) if seg.has_embed else hidden (B,S,D).
+    ctx: dict(positions, cache[segment] or None, use_pallas, train).
+    Returns (x, new_seg_cache, aux_loss)."""
+    positions = ctx["positions"]
+    cache = ctx.get("cache")
+    use_pallas = ctx.get("use_pallas", False)
+    remat = cfg.remat and ctx.get("train", False)
+    aux = jnp.zeros((), jnp.float32)
+
+    if seg.has_embed:
+        tok_emb = L.embedding_apply(p["embed"], x, cfg.compute_dtype)
+        if seg.has_frontend and ctx.get("frontend_emb") is not None:
+            # decode steps past the prefix pass no frontend embeddings
+            pe = ctx["frontend_emb"].astype(cfg.compute_dtype)
+            pe = L.dense_apply(p["projector"], pe)
+            x = jnp.concatenate([pe, tok_emb], axis=1)
+        else:
+            x = tok_emb
+    new_cache = {}
+    for spec in seg.runs:
+        rc = cache[f"cache_{spec.run_id}"] if cache is not None else None
+        run_p = p.get(f"run_{spec.run_id}")
+        shared_p = p.get("shared_block") or ctx.get("shared_block")
+        x, nc, a = _run_apply(run_p, shared_p, spec, cfg, x, positions, rc,
+                              use_pallas=use_pallas, remat=remat)
+        aux = aux + a
+        if cache is not None:
+            new_cache[f"cache_{spec.run_id}"] = nc
+    if seg.has_final_norm:
+        x = L.rmsnorm_apply(p["final_norm"], x)
+    if seg.has_head:
+        x = L.dense_apply(p["head"], x)
+    return x, (new_cache if cache is not None else None), aux
+
+
+# ---------------------------------------------------------------------------
+# the model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TransformerLM:
+    cfg: ModelConfig
+    segments: tuple[SegmentDef, ...]
+
+    # ---- construction -----------------------------------------------------
+    @staticmethod
+    def build(cfg: ModelConfig, cut: int | None = None,
+              nls: bool = False) -> "TransformerLM":
+        """Split the layer stack at ``cut`` (paper's cut layer).  ``nls``
+        adds the U-shaped client tail holding the LM head."""
+        cut = cfg.cut_layer if cut is None else cut
+        kinds = layer_kinds(cfg)
+        cut = max(0, min(cut, len(kinds)))
+        runs = group_runs(kinds)
+        # re-split runs at the cut boundary (cut counts *layers incl shared*)
+        front_runs, middle_runs, seen = [], [], 0
+        for r in runs:
+            if seen + r.count <= cut:
+                front_runs.append(r); seen += r.count
+            elif seen >= cut:
+                middle_runs.append(r)
+            else:
+                front_runs.append(RunSpec(r.kind, cut - seen, r.run_id))
+                middle_runs.append(RunSpec(r.kind, r.count - (cut - seen),
+                                           r.run_id + 1000))
+                seen = cut
+        shared_in_front = any(r.kind == "shared" for r in front_runs)
+        shared_in_middle = any(r.kind == "shared" for r in middle_runs)
+        segs = [SegmentDef("front", tuple(front_runs), has_embed=True,
+                           has_frontend=cfg.frontend is not None,
+                           has_shared=shared_in_front)]
+        segs.append(SegmentDef("middle", tuple(middle_runs),
+                               has_final_norm=True, has_head=not nls,
+                               has_shared=shared_in_middle
+                               and not shared_in_front))
+        if nls:
+            segs.append(SegmentDef("tail", (), has_head=True))
+        return TransformerLM(cfg, tuple(segs))
+
+    # ---- params -----------------------------------------------------------
+    def init(self, key):
+        params, axes = {}, {}
+        keys = jax.random.split(key, len(self.segments))
+        for k, seg in zip(keys, self.segments):
+            params[seg.name], axes[seg.name] = _segment_init(k, seg, self.cfg)
+        return params, axes
+
+    def init_params(self, key):
+        return self.init(key)[0]
+
+    # ---- caches -----------------------------------------------------------
+    def cache_init(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        return {seg.name: _segment_cache_init(seg, self.cfg, batch, max_len,
+                                              dtype)
+                for seg in self.segments}
+
+    # ---- forward ----------------------------------------------------------
+    def apply(self, params, tokens, *, positions=None, cache=None,
+              frontend_emb=None, use_pallas=False, train=False,
+              segment_range=(0, None), boundary_fn=None):
+        """Full or partial (segment_range) forward.
+        tokens: (B,S) int32.  Returns (logits_or_hidden, new_cache, aux)."""
+        b, s = tokens.shape[:2]
+        if positions is None:
+            total = s + (frontend_emb.shape[1]
+                         if frontend_emb is not None else 0)
+            positions = jnp.broadcast_to(jnp.arange(total, dtype=jnp.int32),
+                                         (b, total))
+        shared_block = None
+        for seg in self.segments:
+            if seg.has_shared and seg.name in params:
+                shared_block = params[seg.name].get("shared_block")
+        x = tokens
+        start, stop = segment_range
+        stop = len(self.segments) if stop is None else stop
+        new_cache = dict(cache) if cache is not None else None
+        aux = jnp.zeros((), jnp.float32)
+        last = len(self.segments[start:stop]) - 1
+        for si, seg in enumerate(self.segments[start:stop]):
+            ctx = {"positions": positions,
+                   "cache": cache[seg.name] if cache is not None else None,
+                   "use_pallas": use_pallas, "train": train,
+                   "frontend_emb": frontend_emb,
+                   "shared_block": shared_block}
+            x, seg_cache, a = _segment_apply(params[seg.name], seg, self.cfg,
+                                             x, ctx)
+            aux = aux + a
+            if cache is not None:
+                new_cache[seg.name] = seg_cache
+            if boundary_fn is not None and si != last:
+                # the paper's client->server link (e.g. int8 compression)
+                x = boundary_fn(x)
+        return x, new_cache, aux
+
+    # ---- losses -----------------------------------------------------------
+    def loss(self, params, batch, *, train=True, use_pallas=False,
+             boundary_fn=None):
+        """Next-token xent.  batch: {tokens (B,S), [frontend_emb]}."""
+        tokens = batch["tokens"]
+        logits, _, aux = self.apply(
+            params, tokens[:, :-1], frontend_emb=batch.get("frontend_emb"),
+            train=train, use_pallas=use_pallas, boundary_fn=boundary_fn)
+        labels = tokens[:, 1:]
+        if self.cfg.frontend is not None:
+            # frontend tokens are prefix positions; only score text tokens
+            logits = logits[:, -labels.shape[1]:]
+        logits = logits.astype(jnp.float32)
+        if self.cfg.padded_vocab != self.cfg.vocab_size:
+            # mask padding slots out of the softmax
+            pad_mask = jnp.arange(self.cfg.padded_vocab) >= self.cfg.vocab_size
+            logits = jnp.where(pad_mask, -1e30, logits)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        return (lse - ll).mean() + aux

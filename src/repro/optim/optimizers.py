@@ -1,0 +1,105 @@
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple[Any, Any]]   # (grads, state, params) -> (updates, state)
+
+
+def _lr_at(lr, step):
+    return lr(step) if callable(lr) else lr
+
+
+def sgd(lr, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        mom = jax.tree.map(jnp.zeros_like, params) if momentum else None
+        return {"step": jnp.zeros((), jnp.int32), "mom": mom}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = _lr_at(lr, step)
+        if momentum:
+            mom = jax.tree.map(lambda m, g: momentum * m + g,
+                               state["mom"], grads)
+            upd = jax.tree.map(lambda m: -lr_t * m, mom)
+            return upd, {"step": step, "mom": mom}
+        return jax.tree.map(lambda g: -lr_t * g, grads), {"step": step,
+                                                          "mom": None}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0,
+         state_dtype=jnp.float32) -> Optimizer:
+    """Adam / AdamW (paper §3.2: Adam, b1=.9, b2=.999, lr=1e-4).
+    ``state_dtype=bf16`` halves optimizer HBM for the giant configs."""
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "mu": jax.tree.map(lambda p: jnp.zeros_like(p, state_dtype),
+                                   params),
+                "nu": jax.tree.map(lambda p: jnp.zeros_like(p, state_dtype),
+                                   params)}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = _lr_at(lr, step)
+        mu = jax.tree.map(lambda m, g: (b1 * m.astype(jnp.float32) + (1 - b1)
+                          * g.astype(jnp.float32)).astype(m.dtype),
+                          state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: (b2 * v.astype(jnp.float32) + (1 - b2)
+                          * jnp.square(g.astype(jnp.float32))).astype(v.dtype),
+                          state["nu"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m, v, p):
+            m, v = m.astype(jnp.float32), v.astype(jnp.float32)
+            u = -lr_t * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay and p is not None:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u
+
+        updates = (jax.tree.map(upd, mu, nu, params) if params is not None
+                   else jax.tree.map(lambda m, v: upd(m, v, None), mu, nu))
+        return updates, {"step": step, "mu": mu, "nu": nu}
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(max_norm: float) -> Optimizer:
+    def init(params):
+        return {}
+
+    def update(grads, state, params=None):
+        norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                            for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+        return jax.tree.map(lambda g: g * scale, grads), state
+
+    return Optimizer(init, update)
+
+
+def chain(*opts: Optimizer) -> Optimizer:
+    def init(params):
+        return tuple(o.init(params) for o in opts)
+
+    def update(grads, state, params=None):
+        new_state = []
+        for o, s in zip(opts, state):
+            grads, s = o.update(grads, s, params)
+            new_state.append(s)
+        return grads, tuple(new_state)
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+                        params, updates)

@@ -1,0 +1,35 @@
+"""LR schedules, including WSD (warmup-stable-decay) from MiniCPM
+[arXiv:2404.06395], one of the assigned architectures."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_warmup(peak: float, warmup: int, total: int, floor: float = 0.0):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / jnp.maximum(warmup, 1)
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return fn
+
+
+def wsd(peak: float, warmup: int, stable: int, decay: int,
+        floor_frac: float = 0.1):
+    """Warmup -> Stable (constant) -> exponential Decay (MiniCPM §4)."""
+    floor = peak * floor_frac
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / jnp.maximum(warmup, 1)
+        frac = jnp.clip((step - warmup - stable) / jnp.maximum(decay, 1), 0, 1)
+        dec = peak * (floor / peak) ** frac
+        return jnp.where(step < warmup, warm,
+                         jnp.where(step < warmup + stable, peak, dec))
+    return fn

@@ -1,0 +1,51 @@
+"""Serving steps: batched prefill and single-token decode with KV/SSM caches.
+
+``decode_32k`` / ``long_500k`` lower ``decode_step`` — ONE new token against
+a cache of seq_len — and ``prefill_32k`` lowers ``prefill_step`` (cache
+filled in one pass, last-position logits returned), per the assignment.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def make_prefill_step(model, max_len: int, cache_dtype=jnp.bfloat16):
+    def prefill_step(params, batch):
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        cache = model.cache_init(b, max_len, dtype=cache_dtype)
+        logits, cache, _ = model.apply(
+            params, tokens, cache=cache,
+            frontend_emb=batch.get("frontend_emb"), use_pallas=False)
+        return logits[:, -1, :], cache
+    return prefill_step
+
+
+def make_decode_step(model):
+    def decode_step(params, cache, tokens, positions):
+        """tokens: (B, 1); positions: (B, 1) absolute positions."""
+        logits, cache, _ = model.apply(params, tokens, positions=positions,
+                                       cache=cache)
+        return logits[:, -1, :], cache
+    return decode_step
+
+
+def greedy_generate(model, params, prompt, max_new: int, max_len: int,
+                    cache_dtype=jnp.float32):
+    """Simple autoregressive loop used by the serving example."""
+    b, s = prompt.shape
+    cache = model.cache_init(b, max_len, dtype=cache_dtype)
+    logits, cache, _ = model.apply(params, prompt, cache=cache)
+    decode = jax.jit(make_decode_step(model))
+    tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+    out = [tok]
+    for i in range(max_new - 1):
+        pos = jnp.full((b, 1), s + i, jnp.int32)
+        lg, cache = decode(params, cache, tok, pos)
+        tok = jnp.argmax(lg, axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

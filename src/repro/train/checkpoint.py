@@ -1,0 +1,41 @@
+"""Minimal msgpack pytree checkpointing (no orbax dependency)."""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import msgpack
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree.flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out, treedef
+
+
+def save(path: str, tree) -> None:
+    flat, _ = _flatten(tree)
+    payload = {k: {"dtype": str(v.dtype), "shape": list(v.shape),
+                   "data": v.tobytes()} for k, v in flat.items()}
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+
+
+def load(path: str, like):
+    """Restore into the structure of ``like`` (names must match)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    flat_like, treedef = _flatten(like)
+    leaves = []
+    for key, ref in flat_like.items():
+        rec = payload[key]
+        arr = np.frombuffer(rec["data"], dtype=np.dtype(rec["dtype"]))
+        leaves.append(arr.reshape(rec["shape"]))
+    return jax.tree.unflatten(treedef, leaves)

@@ -1,0 +1,103 @@
+"""Invariants of the communication / computation accounting (paper §4.3/4.4)."""
+
+import numpy as np
+import pytest
+
+from repro.core.comm import comm_per_epoch
+from repro.core.flops import flops_per_epoch, segment_fwd_flops
+from repro.core.partition import cnn_adapter
+from repro.models.cnn import DenseNetConfig, build_densenet
+
+# thin-client regime like the paper's "first 4 of 121 layers" split
+CFG = DenseNetConfig(growth=8, blocks=(3, 6), stem_ch=8, cut_layer=1)
+N_TRAIN = [48, 32, 48, 16, 32]
+N_VAL = [16] * 5
+BS = 8
+
+
+def _adapter(nls=False):
+    return cnn_adapter(build_densenet(CFG, nls=nls))
+
+
+def _batch():
+    return {"image": np.zeros((BS, 16, 16, 1), np.float32),
+            "label": np.zeros((BS,), np.float32)}
+
+
+def test_centralized_no_comm():
+    c = comm_per_epoch("centralized", _adapter(), _batch(), N_TRAIN, N_VAL, BS)
+    assert c.bytes_per_epoch == 0
+
+
+def test_fl_comm_is_model_roundtrip():
+    ad = _adapter()
+    c = comm_per_epoch("fl", ad, _batch(), N_TRAIN, N_VAL, BS)
+    import jax
+    from repro.core.partition import leaf_bytes
+    model_bytes = leaf_bytes(jax.eval_shape(ad.init, jax.random.key(0)))
+    assert c.bytes_per_epoch == 2 * model_bytes * len(N_TRAIN)
+
+
+def test_sl_comm_scales_with_batches():
+    ad = _adapter()
+    c1 = comm_per_epoch("sl_ac", ad, _batch(), N_TRAIN, N_VAL, BS)
+    c2 = comm_per_epoch("sl_ac", ad, _batch(), [2 * n for n in N_TRAIN],
+                        N_VAL, BS)
+    assert c2.breakdown["train_act_up"] == 2 * c1.breakdown["train_act_up"]
+
+
+def test_nls_comm_exceeds_ls():
+    ls = comm_per_epoch("sl_ac", _adapter(False), _batch(), N_TRAIN, N_VAL, BS)
+    nls = comm_per_epoch("sl_ac", _adapter(True), _batch(), N_TRAIN, N_VAL, BS)
+    assert nls.bytes_per_epoch > ls.bytes_per_epoch
+
+
+def test_sflv2_adds_client_averaging_traffic():
+    sl = comm_per_epoch("sl_ac", _adapter(), _batch(), N_TRAIN, N_VAL, BS)
+    v2 = comm_per_epoch("sflv2_ac", _adapter(), _batch(), N_TRAIN, N_VAL, BS)
+    v3 = comm_per_epoch("sflv3_ac", _adapter(), _batch(), N_TRAIN, N_VAL, BS)
+    assert v2.bytes_per_epoch > sl.bytes_per_epoch
+    assert v3.bytes_per_epoch == sl.bytes_per_epoch   # server avg is local
+
+
+def test_am_equals_ac_comm():
+    """Paper Table 4: AC and AM move identical bytes."""
+    ac = comm_per_epoch("sl_ac", _adapter(), _batch(), N_TRAIN, N_VAL, BS)
+    am = comm_per_epoch("sl_am", _adapter(), _batch(), N_TRAIN, N_VAL, BS)
+    assert ac.bytes_per_epoch == am.bytes_per_epoch
+
+
+@pytest.fixture(scope="module")
+def seg_fwd():
+    return segment_fwd_flops(_adapter(), _batch())
+
+
+def test_flops_split_partitions_centralized(seg_fwd):
+    ad = _adapter()
+    cen = flops_per_epoch("centralized", ad, _batch(), N_TRAIN, BS,
+                          seg_fwd=seg_fwd)
+    sl = flops_per_epoch("sl_ac", ad, _batch(), N_TRAIN, BS, seg_fwd=seg_fwd)
+    # server + n_clients * avg_client == centralized total (same compute)
+    total_split = sl.server_tflops + sl.avg_client_tflops * len(N_TRAIN)
+    assert abs(total_split - cen.server_tflops) / cen.server_tflops < 1e-6
+
+
+def test_fl_client_flops_exceed_sl_client_flops(seg_fwd):
+    """Paper Tables 5/6: FL clients do the full model's work."""
+    ad = _adapter()
+    fl = flops_per_epoch("fl", ad, _batch(), N_TRAIN, BS, seg_fwd=seg_fwd)
+    sl = flops_per_epoch("sl_ac", ad, _batch(), N_TRAIN, BS, seg_fwd=seg_fwd)
+    assert fl.avg_client_tflops > 4 * sl.avg_client_tflops
+    assert sl.server_tflops > sl.avg_client_tflops
+
+
+def test_averaging_flops_ordering(seg_fwd):
+    """FL/SFLv3 average model-sized segments; SFLv2 averages tiny clients."""
+    ad = _adapter()
+    fl = flops_per_epoch("fl", ad, _batch(), N_TRAIN, BS, seg_fwd=seg_fwd)
+    v2 = flops_per_epoch("sflv2_ac", ad, _batch(), N_TRAIN, BS,
+                         seg_fwd=seg_fwd)
+    v3 = flops_per_epoch("sflv3_ac", ad, _batch(), N_TRAIN, BS,
+                         seg_fwd=seg_fwd)
+    assert v3.averaging_mflops > v2.averaging_mflops
+    assert fl.averaging_mflops > v2.averaging_mflops

@@ -1,0 +1,112 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.ssd_scan.ops import ssd
+from repro.kernels.ssd_scan.ref import ssd_ref
+from repro.kernels.act_compress.ops import (quantize, dequantize,
+                                            compress_boundary)
+from repro.kernels.act_compress.ref import quantize_ref, roundtrip_ref
+
+
+@pytest.mark.parametrize("b,h,kv,s,d", [
+    (1, 2, 1, 128, 64), (2, 4, 2, 256, 64), (1, 8, 8, 128, 128),
+    (1, 4, 1, 512, 32),
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(b, h, kv, s, d, causal, dtype):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (b, h, s, d)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, kv, s, d)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, kv, s, d)).astype(dtype)
+    out = flash_attention_pallas(q, k, v, causal=causal, block_q=128,
+                                 block_k=128)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("b,l,h,p,g,n,q", [
+    (1, 64, 2, 16, 1, 16, 16), (2, 128, 4, 32, 2, 32, 32),
+    (1, 256, 8, 64, 1, 128, 128), (1, 96, 3, 16, 1, 64, 32),
+])
+def test_ssd_kernel(b, l, h, p, g, n, q):
+    ks = jax.random.split(jax.random.key(0), 4)
+    x = jax.random.normal(ks[0], (b, l, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+    A = jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, l, g, n)) * 0.5
+    C = jax.random.normal(jax.random.key(7), (b, l, g, n)) * 0.5
+    y, fs = ssd(x, dt, A, B, C, q)
+    yr, fsr = ssd_ref(x, dt, A, B, C, q)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=3e-4, rtol=3e-4)
+    np.testing.assert_allclose(np.asarray(fs), np.asarray(fsr),
+                               atol=3e-4, rtol=3e-4)
+
+
+def test_ssd_matches_naive_recurrence():
+    """SSD chunked == the literal per-token recurrence (the defining law)."""
+    b, l, h, p, g, n, q = 1, 32, 2, 8, 1, 8, 8
+    ks = jax.random.split(jax.random.key(3), 4)
+    x = jax.random.normal(ks[0], (b, l, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+    A = jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, l, g, n)) * 0.5
+    C = jax.random.normal(jax.random.key(9), (b, l, g, n)) * 0.5
+    y, fs = ssd(x, dt, A, B, C, q)
+
+    S = np.zeros((b, h, p, n), np.float32)
+    ys = np.zeros((b, l, h, p), np.float32)
+    xn, dtn, An = map(np.asarray, (x, dt, A))
+    Bn = np.repeat(np.asarray(B), h // g, axis=2)
+    Cn = np.repeat(np.asarray(C), h // g, axis=2)
+    for t in range(l):
+        da = np.exp(-dtn[:, t] * An)                      # (b,h)
+        xb = xn[:, t] * dtn[:, t][..., None]              # (b,h,p)
+        S = S * da[:, :, None, None] + np.einsum(
+            "bhp,bhn->bhpn", xb, Bn[:, t])
+        ys[:, t] = np.einsum("bhn,bhpn->bhp", Cn[:, t], S)
+    np.testing.assert_allclose(np.asarray(y), ys, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(fs), S, atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(64, 128), (8, 32, 64), (250, 512),
+                                   (7, 96)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quantize_matches_ref(shape, dtype):
+    x = (jax.random.normal(jax.random.key(0), shape) * 3).astype(dtype)
+    q, s = quantize(x)
+    qr, sr = quantize_ref(np.asarray(x, np.float32).reshape(-1, shape[-1]))
+    dq = np.abs(np.asarray(q).reshape(-1, shape[-1]).astype(np.int32)
+                - np.asarray(qr).astype(np.int32))
+    if dtype == jnp.float32:
+        assert dq.max() == 0
+    else:
+        assert dq.max() <= 1      # bf16 rounding ties may flip one level
+    np.testing.assert_allclose(np.asarray(s).reshape(-1, 1),
+                               np.asarray(sr), rtol=1e-2)
+
+
+def test_roundtrip_error_bound():
+    x = jax.random.normal(jax.random.key(1), (128, 256)) * 5
+    rt = dequantize(*quantize(x), dtype=jnp.float32)
+    amax = np.abs(np.asarray(x)).max(axis=1, keepdims=True)
+    assert (np.abs(np.asarray(rt) - np.asarray(x)) <=
+            amax / 127.0 + 1e-6).all()
+
+
+def test_compress_boundary_gradient_is_identity():
+    x = jax.random.normal(jax.random.key(2), (16, 64))
+    g = jax.grad(lambda xx: (compress_boundary(xx) * xx).sum())(x)
+    # STE: d/dx [stopgrad-ish roundtrip(x) * x] = roundtrip(x) + x
+    expect = compress_boundary(x) + x
+    np.testing.assert_allclose(np.asarray(g), np.asarray(expect), atol=1e-5)

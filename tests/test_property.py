@@ -1,0 +1,154 @@
+"""Property-based tests (hypothesis) on system invariants."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.schedule import alternate_client, alternate_minibatch
+from repro.core.strategies.base import tree_mean, tree_weighted_mean
+from repro.train.metrics import auroc, auprc, f1_score, kappa
+from repro.optim.schedules import wsd, cosine_warmup
+
+_settings = settings(max_examples=40, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# schedules (the paper's AC/AM interleavings)
+# ---------------------------------------------------------------------------
+
+@_settings
+@given(st.lists(st.integers(0, 12), min_size=1, max_size=6))
+def test_schedules_are_permutations_of_same_batches(nb):
+    ac = alternate_client(nb)
+    am = alternate_minibatch(nb)
+    assert sorted(ac) == sorted(am)
+    assert len(ac) == sum(nb)
+    # every (client, batch) appears exactly once
+    assert len(set(ac)) == len(ac)
+
+
+@_settings
+@given(st.integers(1, 6), st.integers(1, 8))
+def test_am_interleaves_clients(n_clients, nb):
+    order = alternate_minibatch([nb] * n_clients)
+    # with equal batch counts, the first n_clients entries hit each client
+    first = [c for c, _ in order[:n_clients]]
+    assert sorted(first) == list(range(n_clients))
+
+
+@_settings
+@given(st.lists(st.integers(1, 9), min_size=2, max_size=5))
+def test_ac_is_client_contiguous(nb):
+    order = alternate_client(nb)
+    seen = [c for c, _ in order]
+    # AC never returns to an earlier client
+    assert seen == sorted(seen)
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+@_settings
+@given(st.lists(st.tuples(st.booleans(),
+                          st.floats(-5, 5, allow_nan=False)),
+                min_size=4, max_size=100))
+def test_auroc_monotone_invariant(pairs):
+    labels = np.array([p[0] for p in pairs])
+    scores = np.array([p[1] for p in pairs])
+    if labels.all() or (~labels).all():
+        return
+    a1 = auroc(labels, scores)
+    # power-of-two scaling is exact in floating point: strictly monotonic
+    # and introduces no ties (additive shifts would absorb subnormals)
+    a2 = auroc(labels, scores * 4.0)
+    assert abs(a1 - a2) < 1e-9
+    assert 0.0 <= a1 <= 1.0
+
+
+def test_auroc_separable_is_one():
+    labels = np.array([0, 0, 0, 1, 1])
+    scores = np.array([.1, .2, .3, .8, .9])
+    assert auroc(labels, scores) == 1.0
+    assert auprc(labels, scores) == 1.0
+    assert f1_score(labels, scores) == 1.0
+    assert kappa(labels, scores) == 1.0
+
+
+@_settings
+@given(st.lists(st.tuples(st.booleans(),
+                          st.floats(0, 1, allow_nan=False)),
+                min_size=4, max_size=60))
+def test_metric_bounds(pairs):
+    labels = np.array([p[0] for p in pairs])
+    scores = np.array([p[1] for p in pairs])
+    if labels.all() or (~labels).all():
+        return
+    assert 0.0 <= auprc(labels, scores) <= 1.0
+    assert -1.0 <= kappa(labels, scores) <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# aggregation (FedAvg invariants)
+# ---------------------------------------------------------------------------
+
+@_settings
+@given(st.integers(1, 5), st.integers(1, 4))
+def test_weighted_mean_equal_weights(n, leaves):
+    trees = [{f"w{i}": jnp.full((3,), float(t + i))
+              for i in range(leaves)} for t in range(n)]
+    m1 = tree_mean(trees)
+    m2 = tree_weighted_mean(trees, [7.0] * n)
+    for a, b in zip(jax.tree.leaves(m1), jax.tree.leaves(m2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+@_settings
+@given(st.floats(0.1, 10, allow_nan=False))
+def test_fedavg_of_identical_models_is_identity(v):
+    trees = [{"w": jnp.full((4,), v)}] * 3
+    m = tree_weighted_mean(trees, [1.0, 2.0, 3.0])
+    np.testing.assert_allclose(np.asarray(m["w"]), v, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# LR schedules
+# ---------------------------------------------------------------------------
+
+@_settings
+@given(st.integers(1, 50), st.integers(1, 200), st.integers(1, 100))
+def test_wsd_phases(warmup, stable, decay):
+    peak = 1e-3
+    fn = wsd(peak, warmup, stable, decay)
+    assert float(fn(0)) <= peak * 1e-6 + 1e-12
+    assert abs(float(fn(warmup)) - peak) < 1e-9
+    assert abs(float(fn(warmup + stable)) - peak) < 1e-9
+    end = float(fn(warmup + stable + decay))
+    assert end <= peak * 0.1 + 1e-9
+    # monotone non-increasing after stable phase
+    xs = [float(fn(warmup + stable + i)) for i in range(0, decay, max(1, decay // 7))]
+    assert all(a >= b - 1e-12 for a, b in zip(xs, xs[1:]))
+
+
+@_settings
+@given(st.integers(1, 20), st.integers(21, 100))
+def test_cosine_bounds(warmup, total):
+    fn = cosine_warmup(1.0, warmup, total)
+    for s in range(0, total + 10, max(1, total // 9)):
+        assert -1e-9 <= float(fn(s)) <= 1.0 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# quantizer error bound (per-row int8)
+# ---------------------------------------------------------------------------
+
+@_settings
+@given(st.integers(1, 6), st.integers(8, 64), st.floats(0.1, 8.0))
+def test_quantize_roundtrip_bound(rows, cols, scale):
+    from repro.kernels.act_compress.ref import roundtrip_ref
+    x = (np.random.default_rng(0).normal(0, scale, (rows, cols))
+         .astype(np.float32))
+    rt = np.asarray(roundtrip_ref(jnp.asarray(x)))
+    amax = np.abs(x).max(axis=1, keepdims=True)
+    assert (np.abs(rt - x) <= amax / 127.0 + 1e-6).all()
