@@ -30,14 +30,18 @@ def main():
     n_va = [len(c.val["label"]) for c in clients]
 
     print("per-epoch communication (analytic, paper Table 4 analogue):")
+    profiles = {}
     for method in ["fl", "sl_ac", "sflv3_ac"]:
-        c = comm_per_epoch(method, adapter, eb, n_tr, n_va, 16)
+        c = profiles[method] = comm_per_epoch(method, adapter, eb, n_tr,
+                                              n_va, 16)
         print(f"  {method:10s} {c.gb * 1e3:8.2f} MB   {c.breakdown}")
-    act = comm_per_epoch("sl_ac", adapter, eb, n_tr, n_va, 16)
-    act_b = sum(v for k, v in act.breakdown.items() if "act" in k or
-                "grad" in k or "hidden" in k)
-    print(f"  sl_ac+int8 {act.gb * 1e3 * 0.27:8.2f} MB   "
-          f"(cut-layer tensors quantized bf16->int8+scale, ~3.7x)")
+    from repro.wire import make_codec
+    raw = profiles["sl_ac"]
+    c8 = comm_per_epoch("sl_ac", adapter, eb, n_tr, n_va, 16,
+                        codec=make_codec("int8"))
+    print(f"  sl_ac+int8 {c8.gb * 1e3:8.2f} MB   "
+          f"(cut-layer tensors int8+row-scale via repro.wire, "
+          f"{raw.bytes_per_epoch / c8.bytes_per_epoch:.2f}x)")
 
     print("\ntraining FL for 4 rounds:")
     strat = make_strategy("fl", adapter, lambda: O.adam(3e-4), len(clients))

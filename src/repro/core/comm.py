@@ -2,7 +2,9 @@
 
 All quantities are derived analytically from activation/parameter pytree
 byte sizes via ``jax.eval_shape`` — the same numbers the paper measured over
-PySyft sockets.  The dry-run cross-checks them against HLO collective bytes.
+PySyft sockets.  The dry-run cross-checks them against HLO collective bytes,
+and ``repro.wire.simulator`` replays the same legs through a network model
+(the analytic total is the simulator's conservation cross-check).
 
 One epoch = training over all train batches + validation over all val
 batches (paper §4.3).  Per train batch the cut-layer traffic is:
@@ -13,6 +15,11 @@ Validation moves activations only (no gradients).
 FL moves 2 x model bytes per client per round; SFLv2 additionally moves the
 client segment back and forth for fed-averaging; SFLv3's averaged segment
 lives on the server so no extra transfer occurs.
+
+The shared primitives (``client_batch_counts``, ``leg_sizes``) are consumed
+by both ``comm_per_epoch`` and the wire simulator so the two can never
+drift apart.  A ``codec`` (repro.wire.codec) shrinks the activation legs
+only — model/segment syncs ship raw parameters.
 """
 
 from __future__ import annotations
@@ -40,30 +47,65 @@ def _batch_count(n_samples: int, batch_size: int) -> int:
     return n_samples // batch_size
 
 
+def client_batch_counts(n_train: list[int], n_val: list[int],
+                        batch_size: int) -> tuple[list[int], list[int]]:
+    """Per-client (train, val) batch counts — one epoch's step grid.
+
+    Validation always runs at least one (possibly short) batch per client.
+    """
+    tr = [_batch_count(n, batch_size) for n in n_train]
+    va = [_batch_count(max(n, batch_size), batch_size) if n >= batch_size
+          else 1 for n in n_val]
+    return tr, va
+
+
+def leg_sizes(adapter: SplitAdapter, example_batch: dict, params=None,
+              codec=None) -> dict:
+    """Per-occurrence byte size of every transfer type ("leg").
+
+    ``act_fm``/``act_mt`` are the on-wire sizes of one batch's cut-layer
+    activations (front->middle / middle->tail), shrunk by ``codec`` when
+    given; ``*_raw`` are the uncompressed sizes.  ``model`` and
+    ``client_seg`` are parameter syncs and never pass through a codec.
+    """
+    if params is None:
+        params = jax.eval_shape(adapter.init, jax.random.key(0))
+    specs = adapter.boundary_specs(example_batch, params)
+
+    def wire(tree):
+        if codec is None:
+            return leaf_bytes(tree)
+        return int(sum(codec.wire_bytes(l) for l in jax.tree.leaves(tree)))
+
+    fm = specs["front->middle"]
+    mt = specs.get("middle->tail", ()) if adapter.nls else ()
+    return {
+        "model": leaf_bytes(params),
+        "client_seg": leaf_bytes(params["front"]) + (
+            leaf_bytes(params["tail"]) if adapter.nls else 0),
+        "act_fm": wire(fm),
+        "act_fm_raw": leaf_bytes(fm),
+        "act_mt": wire(mt) if adapter.nls else 0,
+        "act_mt_raw": leaf_bytes(mt) if adapter.nls else 0,
+    }
+
+
 def comm_per_epoch(method: str, adapter: SplitAdapter, example_batch: dict,
                    n_train: list[int], n_val: list[int],
-                   batch_size: int) -> CommProfile:
+                   batch_size: int, codec=None) -> CommProfile:
     """``n_train``/``n_val``: per-client sample counts."""
-    params = jax.eval_shape(adapter.init, jax.random.key(0))
-    model_bytes = leaf_bytes(params)
-    client_bytes = leaf_bytes(params["front"]) + (
-        leaf_bytes(params["tail"]) if adapter.nls else 0)
-
-    specs = adapter.boundary_specs(example_batch, params)
-    act_fm = leaf_bytes(specs["front->middle"])         # per batch
-    act_mt = leaf_bytes(specs.get("middle->tail", ())) if adapter.nls else 0
-
-    train_batches = sum(_batch_count(n, batch_size) for n in n_train)
-    val_batches = sum(_batch_count(max(n, batch_size), batch_size)
-                      if n >= batch_size else 1 for n in n_val)
+    legs = leg_sizes(adapter, example_batch, codec=codec)
+    tr_counts, va_counts = client_batch_counts(n_train, n_val, batch_size)
+    train_batches, val_batches = sum(tr_counts), sum(va_counts)
+    act_fm, act_mt = legs["act_fm"], legs["act_mt"]
 
     bd = {}
     if method == "centralized":
         total = 0.0
     elif method == "fl":
         n_clients = len(n_train)
-        bd["model_down"] = model_bytes * n_clients
-        bd["model_up"] = model_bytes * n_clients
+        bd["model_down"] = legs["model"] * n_clients
+        bd["model_up"] = legs["model"] * n_clients
         total = sum(bd.values())
     else:
         # SL / SFLv2 / SFLv3 share the cut-layer activation traffic
@@ -76,6 +118,6 @@ def comm_per_epoch(method: str, adapter: SplitAdapter, example_batch: dict,
             bd["val_hidden_up"] = act_mt * val_batches
         if method.startswith("sflv2") or method.startswith("sflv1"):
             # client segments shipped to fed server and back for averaging
-            bd["client_seg_avg"] = 2 * client_bytes * len(n_train)
+            bd["client_seg_avg"] = 2 * legs["client_seg"] * len(n_train)
         total = sum(bd.values())
     return CommProfile(method, float(total), bd)

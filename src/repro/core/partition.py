@@ -39,10 +39,16 @@ class SplitAdapter:
         return "tail" in self.seg_names
 
     # -- composition helpers -------------------------------------------------
-    def full_loss(self, params, batch, train=True):
+    def full_loss(self, params, batch, train=True, boundary=None):
+        """``boundary``: optional fn applied to every cross-segment
+        activation pytree (the repro.wire transport hook — the server sees
+        what actually crossed the wire)."""
         x = self.inputs(batch)
-        for seg in self.seg_names:
+        last = len(self.seg_names) - 1
+        for i, seg in enumerate(self.seg_names):
             x = self.apply_seg(seg, params[seg], x, batch, train)
+            if boundary is not None and i < last:
+                x = boundary(x)
         return self.loss_from_output(x, batch)
 
     def full_scores(self, params, batch):

@@ -7,16 +7,24 @@ from repro.core.strategies.split import SplitLearning
 from repro.core.strategies.splitfed import SplitFedV1, SplitFedV2, SplitFedV3
 
 
-def make_strategy(method: str, adapter, opt_factory, n_clients):
-    """method: centralized | fl | sl_{ac,am} | sflv{1,2,3}_{ac,am}."""
-    if method == "centralized":
-        return Centralized(adapter, opt_factory, n_clients)
-    if method == "fl":
-        return FedAvg(adapter, opt_factory, n_clients)
+def make_strategy(method: str, adapter, opt_factory, n_clients,
+                  transport=None):
+    """method: centralized | fl | sl_{ac,am} | sflv{1,2,3}_{ac,am}.
+
+    ``transport`` (repro.wire.Transport) compresses the cut-layer link of
+    the SL/SFL family; centralized/FL have no cut layer to compress.
+    """
+    if method in ("centralized", "fl"):
+        if transport is not None:
+            raise ValueError(f"{method} has no cut-layer link for a "
+                             "transport codec")
+        return (Centralized if method == "centralized" else FedAvg)(
+            adapter, opt_factory, n_clients)
     kind, schedule = method.rsplit("_", 1)
     cls = {"sl": SplitLearning, "sflv1": SplitFedV1,
            "sflv2": SplitFedV2, "sflv3": SplitFedV3}[kind]
-    return cls(adapter, opt_factory, n_clients, schedule)
+    return cls(adapter, opt_factory, n_clients, schedule,
+               transport=transport)
 
 
 METHODS = ["centralized", "fl", "sl_ac", "sl_am",

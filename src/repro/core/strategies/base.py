@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -131,13 +131,16 @@ def make_full_step(adapter: SplitAdapter, opt: O.Optimizer):
 
 
 def make_split_step(adapter: SplitAdapter, opt_client: O.Optimizer,
-                    opt_server: O.Optimizer):
+                    opt_server: O.Optimizer, transport=None):
     """One SL/SFLv2 step: joint grad through client_i(+tail_i) and server.
 
     Numerically identical to the paper's two-hop backprop; the hop itself is
-    the activation/gradient transfer accounted in repro.core.comm.
+    the activation/gradient transfer accounted in repro.core.comm.  With a
+    ``transport`` (repro.wire), the cut-layer activations are roundtripped
+    through its codec in-graph — the server trains on what crossed the wire.
     """
     nls = adapter.nls
+    boundary = transport.boundary if transport is not None else None
 
     @jax.jit
     def step(client_params, server_params, c_opt, s_opt, batch):
@@ -145,7 +148,7 @@ def make_split_step(adapter: SplitAdapter, opt_client: O.Optimizer,
             params = {"front": cp["front"], "middle": sp}
             if nls:
                 params["tail"] = cp["tail"]
-            return adapter.full_loss(params, batch)
+            return adapter.full_loss(params, batch, boundary=boundary)
 
         loss, (gc, gs) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
             client_params, server_params)
@@ -157,12 +160,13 @@ def make_split_step(adapter: SplitAdapter, opt_client: O.Optimizer,
 
 
 def make_sflv3_step(adapter: SplitAdapter, opt_client: O.Optimizer,
-                    opt_server: O.Optimizer, n_clients: int):
+                    opt_server: O.Optimizer, n_clients: int, transport=None):
     """SplitFedv3 step (paper Algorithm 1, batch-synchronous form):
     clients run in parallel (vmap over the stacked client axis); the server
     segment is updated once with the weighted average of per-client server
     gradients; client segments update individually (never averaged)."""
     nls = adapter.nls
+    boundary = transport.boundary if transport is not None else None
 
     @jax.jit
     def step(stacked_clients, server_params, c_opt, s_opt, stacked_batch):
@@ -170,7 +174,7 @@ def make_sflv3_step(adapter: SplitAdapter, opt_client: O.Optimizer,
             params = {"front": cp["front"], "middle": sp}
             if nls:
                 params["tail"] = cp["tail"]
-            return adapter.full_loss(params, batch)
+            return adapter.full_loss(params, batch, boundary=boundary)
 
         def mean_loss(sc, sp):
             losses = jax.vmap(lambda cp, b: client_loss(cp, sp, b))(

@@ -8,7 +8,6 @@ average (McMahan et al. federated averaging).
 
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core.strategies.base import (Strategy, EpochLog, make_full_step,
                                         np_batches, tree_weighted_mean)

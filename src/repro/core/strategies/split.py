@@ -10,19 +10,20 @@ Adam state) is shared and updated sequentially in schedule order.
 
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core.schedule import SCHEDULES
 from repro.core.strategies.base import (Strategy, EpochLog, make_split_step,
-                                        np_batches, tree_mean)
+                                        np_batches)
 
 
 class SplitLearning(Strategy):
     name = "sl"
 
-    def __init__(self, adapter, opt_factory, n_clients, schedule="ac"):
+    def __init__(self, adapter, opt_factory, n_clients, schedule="ac",
+                 transport=None):
         super().__init__(adapter, opt_factory, n_clients)
         self.schedule = schedule
+        self.transport = transport
         self.name = f"sl_{schedule}"
 
     def _client_tree(self, params):
@@ -37,7 +38,7 @@ class SplitLearning(Strategy):
         if not hasattr(self, "_opt_c"):
             self._opt_c, self._opt_s = self.opt_factory(), self.opt_factory()
             self._step = make_split_step(self.adapter, self._opt_c,
-                                         self._opt_s)
+                                         self._opt_s, self.transport)
         opt_c, opt_s = self._opt_c, self._opt_s
         clients, c_opts = [], []
         server = None
@@ -61,6 +62,8 @@ class SplitLearning(Strategy):
                 state["clients"][c], state["server"], state["c_opts"][c],
                 state["s_opt"], batches[c][b])
             losses.append(float(loss))
+            if self.transport is not None:
+                self.transport.account(self.adapter, batches[c][b])
         self._end_of_epoch(state)
         return state, EpochLog(losses, len(losses))
 

@@ -22,16 +22,16 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.strategies.base import (EpochLog, make_sflv3_step,
-                                        np_batches, stack_trees,
-                                        tree_mean, unstack_tree)
+                                        np_batches, stack_trees, tree_mean)
 from repro.core.strategies.split import SplitLearning
 
 
 class SplitFedV2(SplitLearning):
     """Sequential server training + end-of-epoch client averaging."""
 
-    def __init__(self, adapter, opt_factory, n_clients, schedule="ac"):
-        super().__init__(adapter, opt_factory, n_clients, schedule)
+    def __init__(self, adapter, opt_factory, n_clients, schedule="ac",
+                 transport=None):
+        super().__init__(adapter, opt_factory, n_clients, schedule, transport)
         self.name = f"sflv2_{schedule}"
 
     def _end_of_epoch(self, state):
@@ -42,8 +42,9 @@ class SplitFedV2(SplitLearning):
 class SplitFedV3(SplitLearning):
     """Unique clients + gradient-averaged parallel server updates (Alg. 1)."""
 
-    def __init__(self, adapter, opt_factory, n_clients, schedule="ac"):
-        super().__init__(adapter, opt_factory, n_clients, schedule)
+    def __init__(self, adapter, opt_factory, n_clients, schedule="ac",
+                 transport=None):
+        super().__init__(adapter, opt_factory, n_clients, schedule, transport)
         self.name = f"sflv3_{schedule}"
 
     def setup(self, key):
@@ -52,7 +53,8 @@ class SplitFedV3(SplitLearning):
         if not hasattr(self, "_opt_c"):
             self._opt_c, self._opt_s = self.opt_factory(), self.opt_factory()
             self._step3 = make_sflv3_step(self.adapter, self._opt_c,
-                                          self._opt_s, self.n_clients)
+                                          self._opt_s, self.n_clients,
+                                          self.transport)
         opt_c, opt_s = self._opt_c, self._opt_s
         clients, server = [], None
         for k in keys:
@@ -66,6 +68,14 @@ class SplitFedV3(SplitLearning):
 
     def run_epoch(self, state, client_data, rng, batch_size):
         batches = [np_batches(d, batch_size, rng) for d in client_data]
+        empty = [c for c, b in enumerate(batches) if not b]
+        if empty:
+            # batch-synchronous SFLv3 averages over ALL clients every step;
+            # a client without a single full batch cannot participate
+            raise ValueError(
+                f"clients {empty} have fewer than batch_size="
+                f"{batch_size} train samples; SplitFedV3 needs at least "
+                "one batch per client")
         steps = max(len(b) for b in batches)
         losses = []
         for s in range(steps):
@@ -79,6 +89,11 @@ class SplitFedV3(SplitLearning):
                 state["stacked_clients"], state["server"], state["c_opt"],
                 state["s_opt"], stacked_batch)
             losses.extend(np.asarray(step_losses).tolist())
+            if self.transport is not None:
+                # every client transfers every step (wrap-around included)
+                for c in range(self.n_clients):
+                    self.transport.account(self.adapter,
+                                           batches[c][s % len(batches[c])])
         self._end_of_epoch(state)
         return state, EpochLog(losses, steps)
 
@@ -97,8 +112,9 @@ class SplitFedV3(SplitLearning):
 class SplitFedV1(SplitFedV3):
     """Parallel server (like v3) + fed-averaged clients each round."""
 
-    def __init__(self, adapter, opt_factory, n_clients, schedule="ac"):
-        super().__init__(adapter, opt_factory, n_clients, schedule)
+    def __init__(self, adapter, opt_factory, n_clients, schedule="ac",
+                 transport=None):
+        super().__init__(adapter, opt_factory, n_clients, schedule, transport)
         self.name = f"sflv1_{schedule}"
 
     def _end_of_epoch(self, state):

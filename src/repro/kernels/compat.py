@@ -1,0 +1,12 @@
+"""Pallas-TPU API compatibility across jax versions.
+
+``pltpu.TPUCompilerParams`` (jax <= 0.4.x) was renamed to
+``pltpu.CompilerParams`` in later releases; resolve whichever exists once.
+"""
+
+from __future__ import annotations
+
+import jax.experimental.pallas.tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -96,7 +98,7 @@ def ssd_chunk_kernel(xbar, la, B, C, *, interpret=True):
             jax.ShapeDtypeStruct((b, nc, q, h), jnp.float32),
             jax.ShapeDtypeStruct((b, nc, q, h), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel")),
         interpret=interpret,
     )(xbar, la, B, C)

@@ -99,22 +99,26 @@ def cache_specs(model, shape_name: str, mesh, dtype=jnp.bfloat16,
         def fits(dim, axes):
             return dim % _axes_size(mesh, axes) == 0
 
+        def pspec(*entries):             # singleton axis tuples -> bare names
+            return P(*(e[0] if isinstance(e, tuple) and len(e) == 1 else e
+                       for e in entries))
+
         if name in ("k", "v"):
             bdim, tdim = leaf.shape[stacked], leaf.shape[stacked + 1]
             tspec = seq_axes if fits(tdim, seq_axes) else None
-            return P(*lead, bspec, tspec)
+            return pspec(*lead, bspec, tspec)
         if name == "pos":
             tdim = leaf.shape[stacked + 1]
             tspec = seq_axes if fits(tdim, seq_axes) else None
-            return P(*lead, bspec, tspec)
+            return pspec(*lead, bspec, tspec)
         if name == "conv":
             cdim = leaf.shape[-1]
             cspec = ("model",) if cdim % sizes["model"] == 0 else None
-            return P(*lead, bspec, None, cspec)
+            return pspec(*lead, bspec, None, cspec)
         if name == "ssm":
             hdim = leaf.shape[stacked + 1]
             hspec = ("model",) if hdim % sizes["model"] == 0 else None
-            return P(*lead, bspec, hspec)
+            return pspec(*lead, bspec, hspec)
         return P()
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)

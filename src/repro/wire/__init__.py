@@ -1,0 +1,33 @@
+"""repro.wire — the cut-layer transport subsystem.
+
+Turns the repo's analytic communication accounting (``repro.core.comm``,
+paper Table 4) into an operational layer:
+
+  * ``codec``     — what ships: identity / bf16 / int8 (Pallas) / top-k,
+                    each with exact on-wire byte counts and STE roundtrips.
+  * ``network``   — what it costs: bandwidth/RTT/jitter/straggler models
+                    with ``lan`` / ``hospital_wan`` / ``cellular`` presets.
+  * ``simulator`` — event-driven replay of one epoch's transfer DAG:
+                    per-method wall-clock, per-client timelines,
+                    straggler sensitivity.
+  * ``transport`` — the training-time hook: strategies encode/decode the
+                    cut-layer tensors in-graph and meter real bytes.
+"""
+
+from repro.wire.codec import (BF16Codec, CODECS, Codec, IdentityCodec,
+                              Int8Codec, TopKCodec, make_codec,
+                              tree_roundtrip, tree_wire_bytes)
+from repro.wire.network import SCENARIOS, NetworkModel, make_network
+from repro.wire.simulator import (SimResult, Transfer, WireEvent,
+                                  build_transfers, replay, simulate,
+                                  straggler_sensitivity)
+from repro.wire.transport import Transport, boundary_error
+
+__all__ = [
+    "Codec", "IdentityCodec", "BF16Codec", "Int8Codec", "TopKCodec",
+    "make_codec", "tree_roundtrip", "tree_wire_bytes", "CODECS",
+    "NetworkModel", "SCENARIOS", "make_network",
+    "Transfer", "WireEvent", "SimResult", "build_transfers", "replay",
+    "simulate", "straggler_sensitivity",
+    "Transport", "boundary_error",
+]

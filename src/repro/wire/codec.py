@@ -1,0 +1,208 @@
+"""Cut-layer codecs — what actually crosses the client<->server wire.
+
+A ``Codec`` turns one boundary activation leaf into its on-wire payload and
+back, and — crucially for the paper's Table-4 accounting — reports the EXACT
+number of bytes that payload occupies.  ``roundtrip`` is the in-graph
+encode+decode used by ``repro.wire.transport`` during real training; every
+lossy codec backpropagates with a straight-through estimator (the link is
+quantized, client-side gradients stay full precision — the standard
+deployment reading, same as ``kernels/act_compress``).
+
+Implementations:
+  * ``identity`` — ships the tensor as-is (the paper's measured regime).
+  * ``bf16``     — casts to bfloat16 on the wire (2 bytes/element).
+  * ``int8``     — per-row absmax int8 + one f32 scale per row, via the
+                   Pallas kernel in ``repro.kernels.act_compress``.
+  * ``topk``     — magnitude sparsification: top ``frac`` of elements ship
+                   as (value, int32 index) pairs, the rest decode to zero.
+
+``make_codec("topk:0.05")`` parameterizes the sparsifier fraction.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _ste(fn):
+    """Wrap ``fn`` so the backward pass is identity (straight-through)."""
+    @jax.custom_vjp
+    def f(x):
+        return fn(x)
+
+    f.defvjp(lambda x: (fn(x), None), lambda _, g: (g,))
+    return f
+
+
+def _nelem(spec) -> int:
+    return int(np.prod(spec.shape)) if spec.shape else 1
+
+
+class Codec:
+    """One boundary leaf -> on-wire payload -> reconstruction."""
+
+    name: str = "codec"
+
+    def encode(self, x):
+        """Leaf array -> pytree of payload arrays (what ships)."""
+        raise NotImplementedError
+
+    def decode(self, payload, like):
+        """Payload -> reconstruction with ``like``'s shape/dtype."""
+        raise NotImplementedError
+
+    def wire_bytes(self, spec) -> int:
+        """Exact on-wire bytes for a leaf of ``spec.shape``/``spec.dtype``."""
+        raise NotImplementedError
+
+    def roundtrip(self, x):
+        """In-graph lossy roundtrip; lossy codecs use an STE backward."""
+        raise NotImplementedError
+
+    # -- diagnostics ---------------------------------------------------------
+    def error(self, x) -> dict:
+        """Reconstruction error of one leaf (host-side diagnostic)."""
+        x = jnp.asarray(x)
+        r = self.roundtrip(x).astype(jnp.float32)
+        x = x.astype(jnp.float32)
+        diff = jnp.abs(x - r)
+        denom = jnp.maximum(jnp.linalg.norm(x.reshape(-1)), 1e-12)
+        return {"max_abs": float(diff.max()),
+                "mae": float(diff.mean()),
+                "rel_l2": float(jnp.linalg.norm(diff.reshape(-1)) / denom)}
+
+    def compression_ratio(self, spec) -> float:
+        raw = _nelem(spec) * jnp.dtype(spec.dtype).itemsize
+        return raw / max(self.wire_bytes(spec), 1)
+
+
+class IdentityCodec(Codec):
+    name = "identity"
+
+    def encode(self, x):
+        return {"x": x}
+
+    def decode(self, payload, like):
+        return payload["x"]
+
+    def wire_bytes(self, spec) -> int:
+        return _nelem(spec) * jnp.dtype(spec.dtype).itemsize
+
+    def roundtrip(self, x):
+        return x
+
+
+class BF16Codec(Codec):
+    name = "bf16"
+
+    def __init__(self):
+        self._rt = _ste(lambda x: x.astype(jnp.bfloat16).astype(x.dtype))
+
+    def encode(self, x):
+        return {"x": x.astype(jnp.bfloat16)}
+
+    def decode(self, payload, like):
+        return payload["x"].astype(like.dtype)
+
+    def wire_bytes(self, spec) -> int:
+        return _nelem(spec) * 2
+
+    def roundtrip(self, x):
+        if x.dtype == jnp.bfloat16:
+            return x
+        return self._rt(x)
+
+
+class Int8Codec(Codec):
+    """Per-row absmax int8 + f32 row scale (Pallas kernel, ~4x vs f32)."""
+
+    name = "int8"
+
+    def encode(self, x):
+        from repro.kernels.act_compress.ops import quantize
+        q, s = quantize(x)
+        return {"q": q, "scale": s}
+
+    def decode(self, payload, like):
+        from repro.kernels.act_compress.ops import dequantize
+        return dequantize(payload["q"], payload["scale"], like.dtype)
+
+    def wire_bytes(self, spec) -> int:
+        rows = _nelem(spec) // (spec.shape[-1] if spec.shape else 1)
+        return _nelem(spec) + 4 * max(rows, 1)
+
+    def roundtrip(self, x):
+        from repro.kernels.act_compress.ops import compress_boundary
+        return compress_boundary(x)
+
+
+class TopKCodec(Codec):
+    """Magnitude top-k sparsification: ship (value, int32 index) pairs."""
+
+    def __init__(self, frac: float = 0.1):
+        assert 0.0 < frac <= 1.0
+        self.frac = frac
+        self.name = f"topk:{frac:g}"
+
+        def rt(x):
+            flat = x.reshape(-1)
+            k = self._k(flat.shape[0])
+            _, idx = jax.lax.top_k(jnp.abs(flat.astype(jnp.float32)), k)
+            out = jnp.zeros_like(flat).at[idx].set(flat[idx])
+            return out.reshape(x.shape)
+
+        self._rt = _ste(rt)
+
+    def _k(self, n: int) -> int:
+        return max(1, int(math.ceil(self.frac * n)))
+
+    def encode(self, x):
+        flat = x.reshape(-1)
+        k = self._k(flat.shape[0])
+        _, idx = jax.lax.top_k(jnp.abs(flat.astype(jnp.float32)), k)
+        return {"values": flat[idx], "indices": idx.astype(jnp.int32)}
+
+    def decode(self, payload, like):
+        flat = jnp.zeros((_nelem(like),), like.dtype)
+        flat = flat.at[payload["indices"]].set(
+            payload["values"].astype(like.dtype))
+        return flat.reshape(like.shape)
+
+    def wire_bytes(self, spec) -> int:
+        k = self._k(_nelem(spec))
+        return k * (jnp.dtype(spec.dtype).itemsize + 4)
+
+    def roundtrip(self, x):
+        return self._rt(x)
+
+
+def make_codec(name) -> Codec:
+    """``identity | bf16 | int8 | topk[:frac]`` (or pass a Codec through)."""
+    if isinstance(name, Codec):
+        return name
+    if name.startswith("topk"):
+        _, _, frac = name.partition(":")
+        return TopKCodec(float(frac) if frac else 0.1)
+    try:
+        return {"identity": IdentityCodec, "bf16": BF16Codec,
+                "int8": Int8Codec}[name]()
+    except KeyError:
+        raise KeyError(f"unknown codec {name!r} "
+                       "(identity | bf16 | int8 | topk[:frac])") from None
+
+
+CODECS = ("identity", "bf16", "int8", "topk:0.1")
+
+
+def tree_wire_bytes(codec: Codec, tree) -> int:
+    """Total on-wire bytes of a boundary pytree (specs or arrays)."""
+    return int(sum(codec.wire_bytes(l) for l in jax.tree.leaves(tree)))
+
+
+def tree_roundtrip(codec: Codec, tree):
+    """Apply the codec roundtrip to every leaf of a boundary pytree."""
+    return jax.tree.map(codec.roundtrip, tree)

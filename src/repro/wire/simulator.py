@@ -1,0 +1,279 @@
+"""Event-driven replay of one training epoch's transfers over a network.
+
+``build_transfers`` expands a method's per-epoch communication (the SAME
+legs ``repro.core.comm`` counts analytically — both sit on
+``client_batch_counts``/``leg_sizes`` so the byte totals can never drift)
+into a dependency DAG of one-way transfers:
+
+  * ``sl_*``    — one long chain: the server segment is sequential, so every
+                  (client, batch) hop serializes (act up, [hidden down,
+                  hidden-grad up,] grad down).
+  * ``sflv2_*`` — the SL chain plus an end-of-epoch client-segment
+                  fed-averaging barrier (all ups, then all downs).
+  * ``sflv3_*`` — batch-synchronous parallel steps: per step every active
+                  client uplinks concurrently, the server averages (barrier),
+                  then all gradients flow down concurrently.
+  * ``fl``      — one round: model down to every client, local training
+                  (no cut-layer traffic), model up.
+
+``replay`` is the event engine: a ready-queue (heap) of transfers whose
+dependencies have completed, each serialized on its client's link and
+stretched by the network model's bandwidth/latency/jitter/straggler draw.
+The output is a per-client timeline, the epoch wall-clock, and exact
+bytes-on-wire per leg tag.
+
+Note the simulator follows the ANALYTIC step grid: an SFLv3 client with
+fewer local batches drops out of later steps, while the reference
+``SplitFedV3.run_epoch`` wraps exhausted clients around (re-sending
+duplicate batches).  DESIGN.md §7 records this choice — it is what keeps
+the identity-codec simulation equal to paper Table 4.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from collections import defaultdict
+
+import numpy as np
+
+from repro.core.comm import client_batch_counts, comm_per_epoch, leg_sizes
+from repro.core.schedule import SCHEDULES
+from repro.wire.codec import Codec, IdentityCodec, make_codec
+from repro.wire.network import NetworkModel, make_network
+
+@dataclasses.dataclass(frozen=True)
+class Transfer:
+    """One one-way transfer in the epoch DAG."""
+    id: int
+    client: int
+    nbytes: float
+    direction: str               # "up" | "down"
+    tag: str                     # comm.py breakdown key
+    deps: tuple = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class WireEvent:
+    t_start: float
+    t_end: float
+    client: int
+    direction: str
+    nbytes: float
+    tag: str
+
+
+@dataclasses.dataclass
+class SimResult:
+    method: str
+    codec: str
+    scenario: str
+    n_clients: int
+    wall_clock_s: float
+    bytes_on_wire: float
+    bytes_raw: float
+    breakdown: dict              # tag -> bytes
+    per_client: dict             # client -> {busy_s, idle_frac, transfers}
+    events: list
+
+    @property
+    def compression_ratio(self) -> float:
+        return self.bytes_raw / max(self.bytes_on_wire, 1.0)
+
+    def timeline(self, client: int) -> list:
+        return [e for e in self.events if e.client == client]
+
+
+class _Dag:
+    def __init__(self):
+        self.transfers: list[Transfer] = []
+
+    def add(self, client, nbytes, direction, tag, deps=()) -> int:
+        tid = len(self.transfers)
+        self.transfers.append(Transfer(tid, client, float(nbytes), direction,
+                                       tag, tuple(deps)))
+        return tid
+
+
+def _train_leg_seq(dag: _Dag, client: int, legs: dict, nls: bool,
+                   deps) -> int:
+    """One train step's cut-layer hops for one client; returns last id."""
+    t = dag.add(client, legs["act_fm"], "up", "train_act_up", deps)
+    if nls:
+        t = dag.add(client, legs["act_mt"], "down", "train_hidden_up", [t])
+        t = dag.add(client, legs["act_mt"], "up", "train_hidden_grad_down",
+                    [t])
+    return dag.add(client, legs["act_fm"], "down", "train_grad_down", [t])
+
+
+def _val_leg_seq(dag: _Dag, client: int, legs: dict, nls: bool, deps) -> int:
+    t = dag.add(client, legs["act_fm"], "up", "val_act_up", deps)
+    if nls:
+        t = dag.add(client, legs["act_mt"], "down", "val_hidden_up", [t])
+    return t
+
+
+def build_transfers(method: str, adapter, example_batch: dict,
+                    n_train: list[int], n_val: list[int], batch_size: int,
+                    codec: Codec | None = None) -> list[Transfer]:
+    """Expand one epoch of ``method`` into the transfer DAG."""
+    codec = codec or IdentityCodec()
+    legs = leg_sizes(adapter, example_batch, codec=codec)
+    tr_counts, va_counts = client_batch_counts(n_train, n_val, batch_size)
+    n_clients = len(n_train)
+    nls = adapter.nls
+    dag = _Dag()
+
+    if method == "centralized":
+        return dag.transfers
+
+    if method == "fl":
+        for c in range(n_clients):
+            down = dag.add(c, legs["model"], "down", "model_down")
+            dag.add(c, legs["model"], "up", "model_up", [down])
+        return dag.transfers
+
+    kind, _, schedule = method.partition("_")
+    schedule = schedule or "ac"
+
+    if kind in ("sl", "sflv2"):
+        # sequential server: the whole epoch is one chain across clients
+        last = ()
+        for c, _b in SCHEDULES[schedule](tr_counts):
+            last = [_train_leg_seq(dag, c, legs, nls, last)]
+        for c, nb in enumerate(va_counts):
+            for _ in range(nb):
+                last = [_val_leg_seq(dag, c, legs, nls, last)]
+        if kind == "sflv2":
+            ups = [dag.add(c, legs["client_seg"], "up", "client_seg_avg",
+                           last) for c in range(n_clients)]
+            for c in range(n_clients):
+                dag.add(c, legs["client_seg"], "down", "client_seg_avg", ups)
+        return dag.transfers
+
+    if kind in ("sflv3", "sflv1"):
+        # batch-synchronous parallel steps with a server barrier per step
+        barrier = {c: () for c in range(n_clients)}
+        for s in range(max(tr_counts, default=0)):
+            active = [c for c in range(n_clients) if s < tr_counts[c]]
+            chains = {}
+            for c in active:
+                t = dag.add(c, legs["act_fm"], "up", "train_act_up",
+                            barrier[c])
+                if nls:
+                    t = dag.add(c, legs["act_mt"], "down", "train_hidden_up",
+                                [t])
+                    t = dag.add(c, legs["act_mt"], "up",
+                                "train_hidden_grad_down", [t])
+                chains[c] = t
+            # server averages once every active client's gradient arrived
+            ups = list(chains.values())
+            for c in active:
+                barrier[c] = (dag.add(c, legs["act_fm"], "down",
+                                      "train_grad_down", ups),)
+        if kind == "sflv1":
+            ups = [dag.add(c, legs["client_seg"], "up", "client_seg_avg",
+                           barrier[c]) for c in range(n_clients)]
+            for c in range(n_clients):
+                barrier[c] = (dag.add(c, legs["client_seg"], "down",
+                                      "client_seg_avg", ups),)
+        # validation: per-client chains, clients run concurrently
+        for c, nb in enumerate(va_counts):
+            last = barrier[c]
+            for _ in range(nb):
+                last = [_val_leg_seq(dag, c, legs, nls, last)]
+        return dag.transfers
+
+    raise KeyError(f"unknown method {method!r}")
+
+
+def replay(transfers: list[Transfer], network: NetworkModel,
+           n_clients: int, seed: int = 0,
+           multipliers: np.ndarray | None = None) -> list[WireEvent]:
+    """Run the event loop: pop ready transfers, serialize per client link."""
+    rng = np.random.default_rng(seed)
+    if multipliers is None:
+        multipliers = network.client_multipliers(n_clients, rng)
+    children = defaultdict(list)
+    missing = {}
+    ready_at = defaultdict(float)
+    for t in transfers:
+        missing[t.id] = len(t.deps)
+        for d in t.deps:
+            children[d].append(t.id)
+    heap = [(0.0, t.id) for t in transfers if not t.deps]
+    heapq.heapify(heap)
+    client_free = defaultdict(float)
+    events: list[WireEvent | None] = [None] * len(transfers)
+    done = 0
+    while heap:
+        t_ready, tid = heapq.heappop(heap)
+        tr = transfers[tid]
+        start = max(t_ready, client_free[tr.client])
+        dur = network.transfer_time(tr.nbytes, rng,
+                                    multipliers[tr.client])
+        end = start + dur
+        client_free[tr.client] = end
+        events[tid] = WireEvent(start, end, tr.client, tr.direction,
+                                tr.nbytes, tr.tag)
+        done += 1
+        for ch in children[tid]:
+            ready_at[ch] = max(ready_at[ch], end)
+            missing[ch] -= 1
+            if missing[ch] == 0:
+                heapq.heappush(heap, (ready_at[ch], ch))
+    if done != len(transfers):
+        raise RuntimeError("transfer DAG has a cycle or dangling dependency")
+    return [e for e in events if e is not None]
+
+
+def simulate(method: str, adapter, example_batch: dict, n_train: list[int],
+             n_val: list[int], batch_size: int, codec="identity",
+             network="hospital_wan", seed: int = 0,
+             multipliers: np.ndarray | None = None,
+             keep_events: bool = True) -> SimResult:
+    """One epoch of ``method`` through ``codec`` over ``network``."""
+    codec = make_codec(codec)
+    network = make_network(network)
+    n_clients = len(n_train)
+    transfers = build_transfers(method, adapter, example_batch, n_train,
+                                n_val, batch_size, codec)
+    events = replay(transfers, network, n_clients, seed, multipliers)
+    wall = max((e.t_end for e in events), default=0.0)
+    breakdown = defaultdict(float)
+    per_client = {c: {"busy_s": 0.0, "transfers": 0, "bytes": 0.0}
+                  for c in range(n_clients)}
+    for e in events:
+        breakdown[e.tag] += e.nbytes
+        pc = per_client[e.client]
+        pc["busy_s"] += e.t_end - e.t_start
+        pc["transfers"] += 1
+        pc["bytes"] += e.nbytes
+    for pc in per_client.values():
+        pc["idle_frac"] = 1.0 - pc["busy_s"] / wall if wall > 0 else 0.0
+    raw = comm_per_epoch(method, adapter, example_batch, n_train, n_val,
+                         batch_size).bytes_per_epoch
+    return SimResult(method=method, codec=codec.name, scenario=network.name,
+                     n_clients=n_clients, wall_clock_s=wall,
+                     bytes_on_wire=float(sum(e.nbytes for e in events)),
+                     bytes_raw=float(raw), breakdown=dict(breakdown),
+                     per_client=per_client,
+                     events=events if keep_events else [])
+
+
+def straggler_sensitivity(method: str, adapter, example_batch: dict,
+                          n_train: list[int], n_val: list[int],
+                          batch_size: int, codec="identity",
+                          network="hospital_wan", seed: int = 0) -> float:
+    """Epoch wall-clock ratio: with stragglers / straggler-free.
+
+    Parallel barrier methods (SFLv3, FL) pay the slowest client every
+    step/round; sequential SL only pays stragglers for their own turns.
+    """
+    network = make_network(network)
+    with_s = simulate(method, adapter, example_batch, n_train, n_val,
+                      batch_size, codec, network, seed, keep_events=False)
+    clean = simulate(method, adapter, example_batch, n_train, n_val,
+                     batch_size, codec, network.without_stragglers(), seed,
+                     keep_events=False)
+    return with_s.wall_clock_s / max(clean.wall_clock_s, 1e-12)

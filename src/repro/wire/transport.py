@@ -1,0 +1,95 @@
+"""Transport — the codec hook threaded through real training.
+
+``Transport.boundary`` is a differentiable in-graph roundtrip applied to the
+cut-layer activation pytree between segments (front->middle and, for NLS,
+middle->tail): the server trains on exactly what it would have received over
+the wire.  Lossy codecs backpropagate straight-through (see
+``repro.wire.codec``).
+
+Byte accounting happens host-side from boundary SHAPES (the roundtrip
+itself never materializes a payload inside the jitted step): strategies
+call ``account`` once per training step and the transport accumulates
+exact on-wire and raw byte counters, cached per batch shape.  Evaluation
+paths are not accounted (and not compressed) — clients score with their
+own full-precision segments, matching the paper's eval protocol.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+
+from repro.wire.codec import Codec, make_codec, tree_roundtrip, \
+    tree_wire_bytes
+
+
+@dataclasses.dataclass
+class Transport:
+    codec: Codec
+    bytes_on_wire: float = 0.0
+    bytes_raw: float = 0.0
+    steps: int = 0
+    _cache: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    def __post_init__(self):
+        self.codec = make_codec(self.codec)
+
+    # -- in-graph ------------------------------------------------------------
+    def boundary(self, tree):
+        """Encode+decode every leaf crossing a segment boundary."""
+        return tree_roundtrip(self.codec, tree)
+
+    # -- host-side accounting ------------------------------------------------
+    def account(self, adapter, batch: dict, train: bool = True):
+        """Record one step's boundary traffic (activations up + grads down).
+
+        Cached on the batch's shape signature, so per-step cost after the
+        first call is a dict lookup.
+        """
+        key = tuple(sorted((k, tuple(v.shape), str(v.dtype))
+                           for k, v in batch.items()))
+        if key not in self._cache:
+            specs = adapter.boundary_specs(batch)
+            from repro.core.partition import leaf_bytes
+            wire = sum(tree_wire_bytes(self.codec, t)
+                       for t in specs.values())
+            raw = sum(leaf_bytes(t) for t in specs.values())
+            self._cache[key] = (wire, raw)
+        wire, raw = self._cache[key]
+        legs = 2 if train else 1           # train: + gradient leg back
+        self.bytes_on_wire += legs * wire
+        self.bytes_raw += legs * raw
+        self.steps += 1
+
+    @property
+    def compression_ratio(self) -> float:
+        if self.bytes_on_wire <= 0:
+            return math.nan
+        return self.bytes_raw / self.bytes_on_wire
+
+    def reset(self):
+        self.bytes_on_wire = self.bytes_raw = 0.0
+        self.steps = 0
+
+    def summary(self) -> dict:
+        return {"codec": self.codec.name, "steps": self.steps,
+                "bytes_on_wire": self.bytes_on_wire,
+                "bytes_raw": self.bytes_raw,
+                "compression_ratio": self.compression_ratio}
+
+
+def boundary_error(transport_or_codec, adapter, params, batch: dict) -> dict:
+    """Reconstruction error of the codec on REAL boundary activations."""
+    codec = (transport_or_codec.codec
+             if isinstance(transport_or_codec, Transport)
+             else make_codec(transport_or_codec))
+    x = adapter.inputs(batch)
+    errs = {}
+    for i, seg in enumerate(adapter.seg_names[:-1]):
+        x = adapter.apply_seg(seg, params[seg], x, batch, False)
+        leaves = jax.tree.leaves(x)
+        errs[f"{seg}->"] = [codec.error(l) for l in leaves]
+        x = jax.tree.map(codec.roundtrip, x)
+    return errs

@@ -1,6 +1,7 @@
 """Launch-layer tests: sharding rules, cache specs, HLO analyzer, and a
 subprocess 512-device mesh construction check."""
 
+import os
 import subprocess
 import sys
 
@@ -55,8 +56,10 @@ def test_analyze_counts_scan_iterations():
     ana = analyze(txt)
     assert ana["flops"] == 6 * 2 * 64 ** 3
     # raw cost_analysis counts the body once — the analyzer must not
-    raw = jax.jit(scan6).lower(x, ws).compile().cost_analysis()["flops"]
-    assert raw < ana["flops"]
+    ca = jax.jit(scan6).lower(x, ws).compile().cost_analysis()
+    if isinstance(ca, (list, tuple)):      # older jax returns [dict]
+        ca = ca[0]
+    assert ca["flops"] < ana["flops"]
 
 
 def test_analyze_collectives_zero_on_single_device():
@@ -80,10 +83,12 @@ def test_production_mesh_subprocess():
         "assert m2.axis_names==('pod','data','model');"
         "print('MESH_OK')"
     )
-    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, env={"PYTHONPATH": "src",
-                                         "PATH": "/usr/bin:/bin"},
-                         timeout=120)
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             # without this a TPU-plugin build polls cloud metadata forever
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")},
+        timeout=120)
     assert "MESH_OK" in out.stdout, out.stderr[-500:]
 
 

@@ -1,0 +1,403 @@
+"""repro.wire — codecs, network models, simulator, transport hook."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.comm import client_batch_counts, comm_per_epoch, leg_sizes
+from repro.core.partition import cnn_adapter, leaf_bytes
+from repro.kernels.act_compress.act_compress import (dequantize_pallas,
+                                                     quantize_pallas)
+from repro.kernels.act_compress.ref import (dequantize_ref, quantize_ref,
+                                            roundtrip_ref)
+from repro.models.cnn import DenseNetConfig, build_densenet
+from repro.wire import (NetworkModel, SCENARIOS, Transport, boundary_error,
+                        build_transfers, make_codec, make_network, replay,
+                        simulate, straggler_sensitivity, tree_wire_bytes)
+
+CFG = DenseNetConfig(growth=8, blocks=(3, 6), stem_ch=8, cut_layer=1)
+N_TRAIN = [48, 32, 48, 16, 32]
+N_VAL = [16] * 5
+BS = 8
+
+
+def _adapter(nls=False):
+    return cnn_adapter(build_densenet(CFG, nls=nls))
+
+
+def _batch(n=BS):
+    return {"image": np.zeros((n, 16, 16, 1), np.float32),
+            "label": np.zeros((n,), np.float32)}
+
+
+# ---------------------------------------------------------------------------
+# act_compress kernel: pallas interpret-mode vs ref oracle (satellite)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("t,d", [(8, 16), (256, 64), (512, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_act_compress_pallas_roundtrip_matches_ref(t, d, dtype):
+    x = jax.random.normal(jax.random.key(0), (t, d)).astype(dtype) * 3.0
+    q, s = quantize_pallas(x, interpret=True)
+    q_ref, s_ref = quantize_ref(x)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), rtol=1e-6)
+    # interpret-mode XLA may rewrite x/scale as x*(1/scale): allow ties to
+    # land one quantization level apart
+    assert np.abs(np.asarray(q, np.int32)
+                  - np.asarray(q_ref, np.int32)).max() <= 1
+    out = dequantize_pallas(q, s, dtype, interpret=True)
+    ref = dequantize_ref(q_ref, s_ref, dtype)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=float(np.asarray(s_ref).max()))
+
+
+def test_act_compress_roundtrip_error_bounded_by_row_absmax():
+    x = jax.random.normal(jax.random.key(1), (64, 32), jnp.float32) * 5.0
+    r = np.asarray(roundtrip_ref(x), np.float32)
+    amax = np.abs(np.asarray(x)).max(axis=1, keepdims=True)
+    # absmax int8: |err| <= scale/2 = amax / 254 per element (+ rounding eps)
+    assert (np.abs(np.asarray(x) - r) <= amax / 254 + 1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# codec byte counts are exact
+# ---------------------------------------------------------------------------
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def test_identity_codec_bytes():
+    c = make_codec("identity")
+    assert c.wire_bytes(_spec((4, 8, 8, 3))) == 4 * 8 * 8 * 3 * 4
+    assert c.wire_bytes(_spec((16, 7), jnp.bfloat16)) == 16 * 7 * 2
+
+
+def test_bf16_codec_bytes():
+    assert make_codec("bf16").wire_bytes(_spec((5, 10))) == 5 * 10 * 2
+
+
+def test_int8_codec_bytes_include_row_scales():
+    c = make_codec("int8")
+    # (rows, D): 1 byte/elem + 4-byte f32 scale per row
+    assert c.wire_bytes(_spec((32, 64))) == 32 * 64 + 4 * 32
+    assert c.wire_bytes(_spec((2, 4, 8))) == 2 * 4 * 8 + 4 * 2 * 4
+
+
+def test_topk_codec_bytes():
+    c = make_codec("topk:0.1")
+    n = 1000
+    k = 100                       # ceil(0.1 * 1000)
+    assert c.wire_bytes(_spec((10, 100))) == k * (4 + 4)
+    # fraction rounds up and never drops below one element
+    assert make_codec("topk:0.001").wire_bytes(_spec((10,))) == 1 * (4 + 4)
+
+
+def test_codec_encode_matches_wire_bytes_accounting():
+    """The declared wire_bytes equal the payload's actual nbytes."""
+    x = jax.random.normal(jax.random.key(2), (32, 64), jnp.float32)
+    spec = _spec((32, 64))
+    for name in ("identity", "bf16", "int8", "topk:0.25"):
+        c = make_codec(name)
+        payload = c.encode(x)
+        nbytes = sum(np.asarray(l).nbytes for l in jax.tree.leaves(payload))
+        assert nbytes == c.wire_bytes(spec), name
+
+
+def test_make_codec_rejects_unknown():
+    with pytest.raises(KeyError):
+        make_codec("gzip")
+
+
+# ---------------------------------------------------------------------------
+# codec error bounds + decode fidelity
+# ---------------------------------------------------------------------------
+
+def test_codec_error_bounds():
+    x = jax.random.normal(jax.random.key(3), (64, 32), jnp.float32)
+    assert make_codec("identity").error(x)["max_abs"] == 0.0
+    assert make_codec("bf16").error(x)["rel_l2"] < 1e-2
+    assert make_codec("int8").error(x)["rel_l2"] < 2e-2
+    # a full-fraction top-k is lossless
+    assert make_codec("topk:1.0").error(x)["max_abs"] == 0.0
+
+
+def test_topk_keeps_largest_magnitudes():
+    x = jnp.asarray(np.r_[np.zeros(95), np.arange(1.0, 6.0)],
+                    jnp.float32).reshape(10, 10)
+    c = make_codec("topk:0.05")
+    r = np.asarray(c.roundtrip(x)).reshape(-1)
+    np.testing.assert_array_equal(r[-5:], np.arange(1.0, 6.0))
+    assert (r[:-5] == 0).all()
+
+
+def test_codec_decode_roundtrip_consistent():
+    """decode(encode(x)) == roundtrip(x) for every codec."""
+    x = jax.random.normal(jax.random.key(4), (16, 24), jnp.float32)
+    for name in ("identity", "bf16", "int8", "topk:0.2"):
+        c = make_codec(name)
+        via_payload = np.asarray(c.decode(c.encode(x), x), np.float32)
+        via_rt = np.asarray(c.roundtrip(x), np.float32)
+        np.testing.assert_allclose(via_payload, via_rt, rtol=1e-6,
+                                   atol=1e-6, err_msg=name)
+
+
+def test_lossy_codecs_backprop_straight_through():
+    x = jax.random.normal(jax.random.key(5), (8, 16), jnp.float32)
+    for name in ("bf16", "int8", "topk:0.1"):
+        g = jax.grad(lambda y: (make_codec(name).roundtrip(y) ** 0 * y)
+                     .sum())(x)
+        np.testing.assert_allclose(np.asarray(g), 1.0, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# network models
+# ---------------------------------------------------------------------------
+
+def test_transfer_time_scales_with_bytes_and_bandwidth():
+    rng = np.random.default_rng(0)
+    net = NetworkModel("t", bandwidth_bps=1e6, rtt_s=0.0)
+    assert net.transfer_time(1e6, rng) == pytest.approx(8.0)
+    assert net.transfer_time(2e6, rng) == pytest.approx(16.0)
+    assert net.transfer_time(1e6, rng, mult=4.0) == pytest.approx(32.0)
+
+
+def test_scenarios_ordered_by_speed():
+    rng = np.random.default_rng(0)
+    nb = 1e7
+    t = {k: dataclasses.replace(v, jitter=0.0).transfer_time(nb, rng)
+         for k, v in SCENARIOS.items()}
+    assert t["lan"] < t["hospital_wan"] < t["cellular"]
+
+
+def test_straggler_multipliers_and_removal():
+    net = SCENARIOS["cellular"]
+    mult = net.client_multipliers(1000, np.random.default_rng(0))
+    frac = (mult > 1).mean()
+    assert 0.2 < frac < 0.5                      # ~1/3 of clients
+    clean = net.without_stragglers()
+    assert (clean.client_multipliers(100, np.random.default_rng(0)) == 1).all()
+    assert net.straggler_frac > 0                # frozen original untouched
+
+
+def test_make_network_rejects_unknown():
+    with pytest.raises(KeyError):
+        make_network("carrier_pigeon")
+
+
+# ---------------------------------------------------------------------------
+# simulator: byte conservation vs the analytic profile (the Table-4 gate)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["centralized", "fl", "sl_ac", "sl_am",
+                                    "sflv2_ac", "sflv3_ac", "sflv1_ac"])
+@pytest.mark.parametrize("nls", [False, True])
+def test_simulated_bytes_match_analytic_comm(method, nls):
+    ad = _adapter(nls)
+    r = simulate(method, ad, _batch(), N_TRAIN, N_VAL, BS, "identity",
+                 "lan", keep_events=False)
+    analytic = comm_per_epoch(method, ad, _batch(), N_TRAIN, N_VAL,
+                              BS).bytes_per_epoch
+    assert r.bytes_on_wire == pytest.approx(analytic, rel=0.01)
+    assert r.bytes_raw == pytest.approx(analytic)
+
+
+def test_simulated_breakdown_matches_analytic_breakdown():
+    ad = _adapter()
+    r = simulate("sflv2_ac", ad, _batch(), N_TRAIN, N_VAL, BS, "identity",
+                 "lan", keep_events=False)
+    analytic = comm_per_epoch("sflv2_ac", ad, _batch(), N_TRAIN, N_VAL, BS)
+    for tag, b in analytic.breakdown.items():
+        assert r.breakdown[tag] == pytest.approx(b), tag
+
+
+def test_codec_shrinks_simulated_bytes_and_wallclock():
+    ad = _adapter()
+    args = (ad, _batch(), N_TRAIN, N_VAL, BS)
+    ident = simulate("sl_ac", *args, "identity", "hospital_wan",
+                     keep_events=False)
+    int8 = simulate("sl_ac", *args, "int8", "hospital_wan",
+                    keep_events=False)
+    assert int8.bytes_on_wire < 0.5 * ident.bytes_on_wire
+    assert int8.wall_clock_s < ident.wall_clock_s
+    assert int8.compression_ratio > 2.0
+
+
+def test_parallel_sflv3_faster_than_sequential_sl():
+    """Same bytes, but SFLv3 overlaps client links; SL serializes."""
+    ad = _adapter()
+    net = NetworkModel("flat", bandwidth_bps=1e8, rtt_s=1e-3)   # no jitter
+    args = (ad, _batch(), N_TRAIN, N_VAL, BS)
+    sl = simulate("sl_ac", *args, "identity", net, keep_events=False)
+    v3 = simulate("sflv3_ac", *args, "identity", net, keep_events=False)
+    assert v3.bytes_on_wire == pytest.approx(sl.bytes_on_wire)
+    assert v3.wall_clock_s < sl.wall_clock_s
+
+
+def test_straggler_hits_barrier_methods_harder():
+    """One 10x-slow client: SFLv3 pays it every step, SL only on its turn."""
+    ad = _adapter()
+    net = NetworkModel("flat", bandwidth_bps=1e8, rtt_s=0.0)
+    mult = np.array([1.0, 1.0, 10.0, 1.0, 1.0])
+    args = (ad, _batch(), N_TRAIN, N_VAL, BS)
+    sl_c = simulate("sl_ac", *args, "identity", net, multipliers=mult,
+                    keep_events=False)
+    sl_0 = simulate("sl_ac", *args, "identity", net, keep_events=False)
+    v3_c = simulate("sflv3_ac", *args, "identity", net, multipliers=mult,
+                    keep_events=False)
+    v3_0 = simulate("sflv3_ac", *args, "identity", net, keep_events=False)
+    sl_ratio = sl_c.wall_clock_s / sl_0.wall_clock_s
+    v3_ratio = v3_c.wall_clock_s / v3_0.wall_clock_s
+    assert v3_ratio > sl_ratio > 1.0
+
+
+def test_straggler_sensitivity_at_least_one():
+    ad = _adapter()
+    s = straggler_sensitivity("sflv3_ac", ad, _batch(), N_TRAIN, N_VAL, BS,
+                              "identity", "cellular", seed=0)
+    assert s >= 1.0
+
+
+def test_event_timeline_is_consistent():
+    ad = _adapter()
+    r = simulate("sflv3_ac", ad, _batch(), N_TRAIN, N_VAL, BS, "identity",
+                 "hospital_wan")
+    assert r.events, "expected a non-empty event timeline"
+    for c in range(r.n_clients):
+        tl = r.timeline(c)
+        assert all(e.client == c for e in tl)
+        # one client's link carries one transfer at a time
+        for a, b in zip(tl, tl[1:]):
+            assert b.t_start >= a.t_start
+        assert sum(e.t_end - e.t_start for e in tl) == pytest.approx(
+            r.per_client[c]["busy_s"])
+    assert max(e.t_end for e in r.events) == pytest.approx(r.wall_clock_s)
+
+
+def test_replay_detects_cyclic_dag():
+    from repro.wire.simulator import Transfer
+    cyc = [Transfer(0, 0, 1.0, "up", "t", (1,)),
+           Transfer(1, 0, 1.0, "down", "t", (0,))]
+    with pytest.raises(RuntimeError):
+        replay(cyc, make_network("lan"), 1)
+
+
+def test_build_transfers_unknown_method():
+    with pytest.raises(KeyError):
+        build_transfers("gossip", _adapter(), _batch(), N_TRAIN, N_VAL, BS)
+
+
+# ---------------------------------------------------------------------------
+# comm.py shared primitives
+# ---------------------------------------------------------------------------
+
+def test_client_batch_counts_match_comm_profile():
+    tr, va = client_batch_counts(N_TRAIN, N_VAL, BS)
+    assert tr == [n // BS for n in N_TRAIN]
+    assert all(v >= 1 for v in va)
+    # tiny val shard still ships one batch
+    assert client_batch_counts([BS], [1], BS)[1] == [1]
+
+
+def test_leg_sizes_with_codec_shrink_only_activations():
+    ad = _adapter()
+    raw = leg_sizes(ad, _batch())
+    c8 = leg_sizes(ad, _batch(), codec=make_codec("int8"))
+    assert c8["model"] == raw["model"]
+    assert c8["client_seg"] == raw["client_seg"]
+    assert c8["act_fm"] < raw["act_fm"]
+    assert c8["act_fm_raw"] == raw["act_fm_raw"]
+
+
+def test_comm_per_epoch_codec_kwarg():
+    ad = _adapter()
+    raw = comm_per_epoch("sl_ac", ad, _batch(), N_TRAIN, N_VAL, BS)
+    c8 = comm_per_epoch("sl_ac", ad, _batch(), N_TRAIN, N_VAL, BS,
+                        codec=make_codec("int8"))
+    assert 0 < c8.bytes_per_epoch < 0.5 * raw.bytes_per_epoch
+
+
+# ---------------------------------------------------------------------------
+# transport hook in real training
+# ---------------------------------------------------------------------------
+
+def test_transport_accounting_matches_analytic_train_legs():
+    from repro import optim as O
+    from repro.core.strategies import make_strategy
+    ad = _adapter()
+    n, bs = 16, 8
+    data = [{"image": np.random.default_rng(c).normal(
+                 0, 1, (n, 16, 16, 1)).astype(np.float32),
+             "label": np.zeros((n,), np.float32)} for c in range(2)]
+    tp = Transport("identity")
+    strat = make_strategy("sl_ac", ad, lambda: O.adam(1e-3), 2, transport=tp)
+    state = strat.setup(jax.random.key(0))
+    state, log = strat.run_epoch(state, data, np.random.default_rng(0), bs)
+    eb = {k: v[:bs] for k, v in data[0].items()}
+    prof = comm_per_epoch("sl_ac", ad, eb, [n, n], [0, 0], bs)
+    train_bytes = (prof.breakdown["train_act_up"]
+                   + prof.breakdown["train_grad_down"])
+    assert tp.bytes_on_wire == pytest.approx(train_bytes)
+    assert tp.bytes_raw == pytest.approx(train_bytes)
+    assert tp.steps == log.steps
+
+
+def test_training_with_int8_transport_runs_and_compresses():
+    from repro import optim as O
+    from repro.core.strategies import make_strategy
+    ad = _adapter()
+    n, bs = 16, 8
+    data = [{"image": np.random.default_rng(c).normal(
+                 0, 1, (n, 16, 16, 1)).astype(np.float32),
+             "label": (np.arange(n) % 2).astype(np.float32)}
+            for c in range(2)]
+    tp = Transport("int8")
+    strat = make_strategy("sflv3_ac", ad, lambda: O.adam(1e-3), 2,
+                          transport=tp)
+    state = strat.setup(jax.random.key(0))
+    state, log = strat.run_epoch(state, data, np.random.default_rng(0), bs)
+    assert np.isfinite(log.mean_loss)
+    assert tp.compression_ratio > 2.0
+    assert tp.bytes_on_wire > 0
+
+
+def test_sflv3_rejects_client_without_a_full_batch():
+    """Batch-synchronous SFLv3 needs >= 1 batch per client — clear error,
+    not the ZeroDivisionError the wrap-around modulo would raise."""
+    from repro import optim as O
+    from repro.core.strategies import make_strategy
+    ad = _adapter()
+    data = [{"image": np.zeros((n, 16, 16, 1), np.float32),
+             "label": np.zeros((n,), np.float32)} for n in (16, 4)]
+    strat = make_strategy("sflv3_ac", ad, lambda: O.adam(1e-3), 2)
+    state = strat.setup(jax.random.key(0))
+    with pytest.raises(ValueError, match="fewer than batch_size"):
+        strat.run_epoch(state, data, np.random.default_rng(0), 8)
+
+
+def test_transport_rejected_for_methods_without_cut_layer():
+    from repro import optim as O
+    from repro.core.strategies import make_strategy
+    with pytest.raises(ValueError):
+        make_strategy("fl", _adapter(), lambda: O.adam(1e-3), 2,
+                      transport=Transport("int8"))
+
+
+def test_boundary_error_reports_per_boundary_leaves():
+    ad = _adapter(nls=True)
+    params = ad.init(jax.random.key(0))
+    errs = boundary_error("int8", ad, params, _batch())
+    assert set(errs) == {"front->", "middle->"}
+    for v in errs.values():
+        for e in v:
+            assert 0 <= e["rel_l2"] < 0.1
+
+
+def test_tree_wire_bytes_sums_leaves():
+    c = make_codec("identity")
+    tree = {"a": _spec((2, 3)), "b": [_spec((4,), jnp.bfloat16)]}
+    assert tree_wire_bytes(c, tree) == 2 * 3 * 4 + 4 * 2
