@@ -8,23 +8,33 @@ from repro.core.strategies.splitfed import SplitFedV1, SplitFedV2, SplitFedV3
 
 
 def make_strategy(method: str, adapter, opt_factory, n_clients,
-                  transport=None):
+                  transport=None, privacy=None):
     """method: centralized | fl | sl_{ac,am} | sflv{1,2,3}_{ac,am}.
 
     ``transport`` (repro.wire.Transport) compresses the cut-layer link of
     the SL/SFL family; centralized/FL have no cut layer to compress.
+    ``privacy`` (repro.privacy.PrivacyConfig) turns on DP-SGD for any
+    method, cut-layer noise for the SL/SFL family, and pairwise-mask
+    secure aggregation for FL.
     """
     if method in ("centralized", "fl"):
         if transport is not None:
             raise ValueError(f"{method} has no cut-layer link for a "
                              "transport codec")
+        if privacy is not None and privacy.cut_noise_std > 0:
+            raise ValueError(f"{method} has no cut layer to noise")
+        if privacy is not None and privacy.secagg and method != "fl":
+            raise ValueError("secure aggregation needs federated uploads")
         return (Centralized if method == "centralized" else FedAvg)(
-            adapter, opt_factory, n_clients)
+            adapter, opt_factory, n_clients, privacy=privacy)
+    if privacy is not None and privacy.secagg:
+        raise ValueError("secure aggregation applies to FL model uploads; "
+                         f"{method} ships activations, not updates")
     kind, schedule = method.rsplit("_", 1)
     cls = {"sl": SplitLearning, "sflv1": SplitFedV1,
            "sflv2": SplitFedV2, "sflv3": SplitFedV3}[kind]
     return cls(adapter, opt_factory, n_clients, schedule,
-               transport=transport)
+               transport=transport, privacy=privacy)
 
 
 METHODS = ["centralized", "fl", "sl_ac", "sl_am",

@@ -60,10 +60,13 @@ class Strategy:
     name: str = "base"
 
     def __init__(self, adapter: SplitAdapter, opt_factory: Callable[[], O.Optimizer],
-                 n_clients: int):
+                 n_clients: int, privacy=None):
         self.adapter = adapter
         self.opt_factory = opt_factory
         self.n_clients = n_clients
+        self.privacy = privacy          # repro.privacy.PrivacyConfig | None
+        self._accountants = None
+        self._key_step = 0
 
     # -- to implement ---------------------------------------------------------
     def setup(self, key):
@@ -76,6 +79,46 @@ class Strategy:
         """Full param dict (all segments) used to score client ``client_idx``."""
         raise NotImplementedError
 
+    # -- privacy plumbing -----------------------------------------------------
+    @property
+    def _dp(self) -> bool:
+        """DP-SGD (clip/noise on gradients) active."""
+        return self.privacy is not None and self.privacy.dp_enabled
+
+    @property
+    def _keyed(self) -> bool:
+        """Jitted step consumes a PRNG key (DP-SGD or cut-layer noise)."""
+        p = self.privacy
+        return p is not None and (p.dp_enabled or p.cut_noise_std > 0)
+
+    def _next_key(self):
+        """Fresh per-step key derived from the privacy seed."""
+        if not hasattr(self, "_base_key"):
+            seed = self.privacy.seed if self.privacy is not None else 0
+            self._base_key = jax.random.key(seed)
+        self._key_step += 1
+        return jax.random.fold_in(self._base_key, self._key_step)
+
+    def _dp_account(self, client_idx, n_samples, batch_size, count=1):
+        """Record ``count`` DP mechanism applications on hospital
+        ``client_idx``'s data (sampling rate batch_size / n_samples)."""
+        if not self._dp:
+            return
+        if self._accountants is None:
+            from repro.privacy.accountant import RDPAccountant
+            self._accountants = [
+                RDPAccountant(self.privacy.noise_multiplier,
+                              self.privacy.delta)
+                for _ in range(self.n_clients)]
+        q = min(batch_size / max(n_samples, 1), 1.0)
+        self._accountants[client_idx].step(q, count)
+
+    def privacy_report(self) -> list:
+        """Per-hospital accountant summaries ((eps, delta) each)."""
+        if self._accountants is None:
+            return []
+        return [a.summary() for a in self._accountants]
+
     # -- common ---------------------------------------------------------------
     def _scores_fn(self):
         if not hasattr(self, "_scores_jit"):
@@ -83,11 +126,24 @@ class Strategy:
         return self._scores_jit
 
     def scores(self, state, client_idx, data, batch_size=60):
+        """Per-sample scores for EVERY sample: the final partial batch is
+        padded (by repeating the last row) to the jitted batch shape and the
+        padding sliced off, so small hospitals never lose eval samples."""
         params = self.params_for_eval(state, client_idx)
         fn = self._scores_fn()
+        n = len(data["label"])
+        if n == 0:
+            return np.zeros((0,))
+        bs = min(batch_size, n)
         outs = []
-        for b in np_batches(data, min(batch_size, len(data["label"])), None):
-            outs.append(np.asarray(fn(params, b)))
+        for start in range(0, n, bs):
+            b = {k: v[start:start + bs] for k, v in data.items()}
+            m = len(b["label"])
+            if m < bs:                     # pad-and-mask the remainder batch
+                b = {k: np.concatenate(
+                    [v, np.repeat(v[-1:], bs - m, axis=0)]) for k, v in
+                    b.items()}
+            outs.append(np.asarray(fn(params, b))[:m])
         return np.concatenate(outs) if outs else np.zeros((0,))
 
     def evaluate(self, state, clients, split="test", batch_size=60):
@@ -120,8 +176,24 @@ class Strategy:
 # jitted step builders
 # ---------------------------------------------------------------------------
 
-def make_full_step(adapter: SplitAdapter, opt: O.Optimizer):
-    """Plain step over ALL segments jointly (centralized / FL local)."""
+def make_full_step(adapter: SplitAdapter, opt: O.Optimizer, privacy=None):
+    """Plain step over ALL segments jointly (centralized / FL local).
+
+    With a DP-enabled ``privacy`` config the returned step takes a fourth
+    ``key`` argument and uses the DP-SGD estimator (per-example clip via the
+    fused Pallas kernel + Gaussian noise) in place of the batch gradient.
+    """
+    if privacy is not None and privacy.dp_enabled:
+        from repro.privacy.dpsgd import dp_value_and_grad, keyed
+        vg = dp_value_and_grad(keyed(adapter.full_loss), privacy)
+
+        @jax.jit
+        def dp_step(params, opt_state, batch, key):
+            loss, grads = vg(params, batch, key)
+            updates, opt_state = opt.update(grads, opt_state, params)
+            return O.apply_updates(params, updates), opt_state, loss
+        return dp_step
+
     @jax.jit
     def step(params, opt_state, batch):
         loss, grads = jax.value_and_grad(adapter.full_loss)(params, batch)
@@ -131,16 +203,45 @@ def make_full_step(adapter: SplitAdapter, opt: O.Optimizer):
 
 
 def make_split_step(adapter: SplitAdapter, opt_client: O.Optimizer,
-                    opt_server: O.Optimizer, transport=None):
+                    opt_server: O.Optimizer, transport=None, privacy=None):
     """One SL/SFLv2 step: joint grad through client_i(+tail_i) and server.
 
     Numerically identical to the paper's two-hop backprop; the hop itself is
     the activation/gradient transfer accounted in repro.core.comm.  With a
     ``transport`` (repro.wire), the cut-layer activations are roundtripped
     through its codec in-graph — the server trains on what crossed the wire.
+
+    A privacy config adds a sixth ``key`` argument: DP-SGD clips/noises the
+    JOINT (client, server) per-example gradient, and/or Gaussian cut-layer
+    noise rides on the boundary after the codec.
     """
     nls = adapter.nls
-    boundary = transport.boundary if transport is not None else None
+    base_boundary = transport.boundary if transport is not None else None
+    priv = (privacy if privacy is not None and
+            (privacy.dp_enabled or privacy.cut_noise_std > 0) else None)
+
+    if priv is not None:
+        from repro.privacy.dpsgd import boundary_with_key, dp_value_and_grad
+
+        def loss_fn(both, b, k):
+            params = {"front": both["c"]["front"], "middle": both["s"]}
+            if nls:
+                params["tail"] = both["c"]["tail"]
+            return adapter.full_loss(
+                params, b, boundary=boundary_with_key(base_boundary, priv, k))
+
+        vg = (dp_value_and_grad(loss_fn, priv) if priv.dp_enabled
+              else jax.value_and_grad(loss_fn))
+
+        @jax.jit
+        def dp_step(client_params, server_params, c_opt, s_opt, batch, key):
+            loss, g = vg({"c": client_params, "s": server_params}, batch,
+                         key)
+            cu, c_opt = opt_client.update(g["c"], c_opt, client_params)
+            su, s_opt = opt_server.update(g["s"], s_opt, server_params)
+            return (O.apply_updates(client_params, cu),
+                    O.apply_updates(server_params, su), c_opt, s_opt, loss)
+        return dp_step
 
     @jax.jit
     def step(client_params, server_params, c_opt, s_opt, batch):
@@ -148,7 +249,7 @@ def make_split_step(adapter: SplitAdapter, opt_client: O.Optimizer,
             params = {"front": cp["front"], "middle": sp}
             if nls:
                 params["tail"] = cp["tail"]
-            return adapter.full_loss(params, batch, boundary=boundary)
+            return adapter.full_loss(params, batch, boundary=base_boundary)
 
         loss, (gc, gs) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
             client_params, server_params)
@@ -160,13 +261,52 @@ def make_split_step(adapter: SplitAdapter, opt_client: O.Optimizer,
 
 
 def make_sflv3_step(adapter: SplitAdapter, opt_client: O.Optimizer,
-                    opt_server: O.Optimizer, n_clients: int, transport=None):
+                    opt_server: O.Optimizer, n_clients: int, transport=None,
+                    privacy=None):
     """SplitFedv3 step (paper Algorithm 1, batch-synchronous form):
     clients run in parallel (vmap over the stacked client axis); the server
     segment is updated once with the weighted average of per-client server
-    gradients; client segments update individually (never averaged)."""
+    gradients; client segments update individually (never averaged).
+
+    A privacy config adds a sixth ``key`` argument: every client clips and
+    noises its OWN per-example gradients (keys split per client) before the
+    server averages, so each hospital's DP guarantee stands on its own.
+    """
     nls = adapter.nls
     boundary = transport.boundary if transport is not None else None
+    priv = (privacy if privacy is not None and
+            (privacy.dp_enabled or privacy.cut_noise_std > 0) else None)
+
+    if priv is not None:
+        from repro.privacy.dpsgd import boundary_with_key, dp_value_and_grad
+
+        def loss_fn(both, b, k):
+            params = {"front": both["c"]["front"], "middle": both["s"]}
+            if nls:
+                params["tail"] = both["c"]["tail"]
+            return adapter.full_loss(
+                params, b, boundary=boundary_with_key(boundary, priv, k))
+
+        vg = (dp_value_and_grad(loss_fn, priv) if priv.dp_enabled
+              else jax.value_and_grad(loss_fn))
+
+        @jax.jit
+        def dp_step(stacked_clients, server_params, c_opt, s_opt,
+                    stacked_batch, key):
+            keys = jax.random.split(key, n_clients)
+
+            def one(cp, b, k):
+                return vg({"c": cp, "s": server_params}, b, k)
+
+            losses, g = jax.vmap(one)(stacked_clients, stacked_batch, keys)
+            gc = g["c"]                          # already per-client grads
+            gs = jax.tree.map(lambda x: x.mean(axis=0), g["s"])
+            cu, c_opt = opt_client.update(gc, c_opt, stacked_clients)
+            su, s_opt = opt_server.update(gs, s_opt, server_params)
+            return (O.apply_updates(stacked_clients, cu),
+                    O.apply_updates(server_params, su), c_opt, s_opt,
+                    losses)
+        return dp_step
 
     @jax.jit
     def step(stacked_clients, server_params, c_opt, s_opt, stacked_batch):

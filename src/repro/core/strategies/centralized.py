@@ -15,17 +15,27 @@ class Centralized(Strategy):
         params = self.adapter.init(key)
         if not hasattr(self, "_opt"):
             self._opt = self.opt_factory()
-            self._step = make_full_step(self.adapter, self._opt)
+            self._step = make_full_step(self.adapter, self._opt,
+                                        self.privacy)
         return {"params": params, "opt": self._opt.init(params)}
 
     def run_epoch(self, state, client_data, rng, batch_size):
         pooled = {k: np.concatenate([d[k] for d in client_data])
                   for k in client_data[0]}
+        n_pooled = len(pooled["label"])
         losses = []
         for batch in np_batches(pooled, batch_size, rng):
-            state["params"], state["opt"], loss = self._step(
-                state["params"], state["opt"], batch)
+            if self._keyed:
+                state["params"], state["opt"], loss = self._step(
+                    state["params"], state["opt"], batch, self._next_key())
+            else:
+                state["params"], state["opt"], loss = self._step(
+                    state["params"], state["opt"], batch)
             losses.append(float(loss))
+            # centralized DP: every hospital's records sit in the pooled
+            # set, so each carries the same pooled-rate guarantee
+            for ci in range(self.n_clients):
+                self._dp_account(ci, n_pooled, batch_size)
         return state, EpochLog(losses, len(losses))
 
     def params_for_eval(self, state, client_idx):

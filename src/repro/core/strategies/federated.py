@@ -4,10 +4,20 @@ One federated round == one epoch (as in the paper): the global model is
 pushed to every client, each client runs one local epoch with its own Adam,
 and the server aggregates the resulting parameters with a data-size-weighted
 average (McMahan et al. federated averaging).
+
+With ``privacy.dp_enabled`` every local step uses the DP-SGD estimator and
+each hospital's accountant composes over its own rounds; with
+``privacy.secagg`` the aggregation runs through pairwise-mask secure
+aggregation (``repro.privacy.secagg``) — the server only ever adds
+uniformly-masked fixed-point uploads, and the handshake + masked-upload
+bytes are metered.
 """
 
 from __future__ import annotations
 
+import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.core.strategies.base import (Strategy, EpochLog, make_full_step,
                                         np_batches, tree_weighted_mean)
@@ -20,20 +30,39 @@ class FedAvg(Strategy):
         params = self.adapter.init(key)
         if not hasattr(self, "_opt"):
             self._opt = self.opt_factory()
-            self._step = make_full_step(self.adapter, self._opt)
+            self._step = make_full_step(self.adapter, self._opt,
+                                        self.privacy)
+        if (self.privacy is not None and self.privacy.secagg
+                and not hasattr(self, "secagg")):
+            from repro.privacy.secagg import SecAgg
+            self.secagg = SecAgg(self.n_clients, seed=self.privacy.seed)
         return {"params": params}
+
+    def _aggregate(self, locals_, weights):
+        if self.privacy is not None and self.privacy.secagg:
+            host = [jax.tree.map(np.asarray, t) for t in locals_]
+            agg = self.secagg.aggregate_weighted(host, weights)
+            return jax.tree.map(lambda a, old: jnp.asarray(a, old.dtype),
+                                agg, locals_[0])
+        return tree_weighted_mean(locals_, weights)
 
     def run_epoch(self, state, client_data, rng, batch_size):
         locals_, weights, losses = [], [], []
         for ci, data in enumerate(client_data):
             p = state["params"]                    # start from global
             opt_state = self._opt.init(p)          # fresh optimizer per round
+            n = len(data["label"])
             for batch in np_batches(data, batch_size, rng):
-                p, opt_state, loss = self._step(p, opt_state, batch)
+                if self._keyed:
+                    p, opt_state, loss = self._step(p, opt_state, batch,
+                                                    self._next_key())
+                else:
+                    p, opt_state, loss = self._step(p, opt_state, batch)
                 losses.append(float(loss))
+                self._dp_account(ci, n, batch_size)
             locals_.append(p)
-            weights.append(len(data["label"]))
-        state["params"] = tree_weighted_mean(locals_, weights)
+            weights.append(n)
+        state["params"] = self._aggregate(locals_, weights)
         return state, EpochLog(losses, len(losses))
 
     def params_for_eval(self, state, client_idx):

@@ -20,8 +20,8 @@ class SplitLearning(Strategy):
     name = "sl"
 
     def __init__(self, adapter, opt_factory, n_clients, schedule="ac",
-                 transport=None):
-        super().__init__(adapter, opt_factory, n_clients)
+                 transport=None, privacy=None):
+        super().__init__(adapter, opt_factory, n_clients, privacy=privacy)
         self.schedule = schedule
         self.transport = transport
         self.name = f"sl_{schedule}"
@@ -38,7 +38,8 @@ class SplitLearning(Strategy):
         if not hasattr(self, "_opt_c"):
             self._opt_c, self._opt_s = self.opt_factory(), self.opt_factory()
             self._step = make_split_step(self.adapter, self._opt_c,
-                                         self._opt_s, self.transport)
+                                         self._opt_s, self.transport,
+                                         self.privacy)
         opt_c, opt_s = self._opt_c, self._opt_s
         clients, c_opts = [], []
         server = None
@@ -57,11 +58,14 @@ class SplitLearning(Strategy):
         order = SCHEDULES[self.schedule]([len(b) for b in batches])
         losses = []
         for c, b in order:
+            args = (state["clients"][c], state["server"],
+                    state["c_opts"][c], state["s_opt"], batches[c][b])
+            if self._keyed:
+                args = args + (self._next_key(),)
             (state["clients"][c], state["server"], state["c_opts"][c],
-             state["s_opt"], loss) = self._step(
-                state["clients"][c], state["server"], state["c_opts"][c],
-                state["s_opt"], batches[c][b])
+             state["s_opt"], loss) = self._step(*args)
             losses.append(float(loss))
+            self._dp_account(c, len(client_data[c]["label"]), batch_size)
             if self.transport is not None:
                 self.transport.account(self.adapter, batches[c][b])
         self._end_of_epoch(state)

@@ -30,8 +30,9 @@ class SplitFedV2(SplitLearning):
     """Sequential server training + end-of-epoch client averaging."""
 
     def __init__(self, adapter, opt_factory, n_clients, schedule="ac",
-                 transport=None):
-        super().__init__(adapter, opt_factory, n_clients, schedule, transport)
+                 transport=None, privacy=None):
+        super().__init__(adapter, opt_factory, n_clients, schedule,
+                         transport, privacy)
         self.name = f"sflv2_{schedule}"
 
     def _end_of_epoch(self, state):
@@ -43,8 +44,9 @@ class SplitFedV3(SplitLearning):
     """Unique clients + gradient-averaged parallel server updates (Alg. 1)."""
 
     def __init__(self, adapter, opt_factory, n_clients, schedule="ac",
-                 transport=None):
-        super().__init__(adapter, opt_factory, n_clients, schedule, transport)
+                 transport=None, privacy=None):
+        super().__init__(adapter, opt_factory, n_clients, schedule,
+                         transport, privacy)
         self.name = f"sflv3_{schedule}"
 
     def setup(self, key):
@@ -54,7 +56,7 @@ class SplitFedV3(SplitLearning):
             self._opt_c, self._opt_s = self.opt_factory(), self.opt_factory()
             self._step3 = make_sflv3_step(self.adapter, self._opt_c,
                                           self._opt_s, self.n_clients,
-                                          self.transport)
+                                          self.transport, self.privacy)
         opt_c, opt_s = self._opt_c, self._opt_s
         clients, server = [], None
         for k in keys:
@@ -84,11 +86,17 @@ class SplitFedV3(SplitLearning):
             stacked_batch = stack_trees(
                 [batches[c][s % len(batches[c])] for c in
                  range(self.n_clients)])
+            args = (state["stacked_clients"], state["server"],
+                    state["c_opt"], state["s_opt"], stacked_batch)
+            if self._keyed:
+                args = args + (self._next_key(),)
             (state["stacked_clients"], state["server"], state["c_opt"],
-             state["s_opt"], step_losses) = self._step3(
-                state["stacked_clients"], state["server"], state["c_opt"],
-                state["s_opt"], stacked_batch)
+             state["s_opt"], step_losses) = self._step3(*args)
             losses.extend(np.asarray(step_losses).tolist())
+            for c in range(self.n_clients):
+                # wrap-around resampling included: every client is touched
+                self._dp_account(c, len(client_data[c]["label"]),
+                                 batch_size)
             if self.transport is not None:
                 # every client transfers every step (wrap-around included)
                 for c in range(self.n_clients):
@@ -113,8 +121,9 @@ class SplitFedV1(SplitFedV3):
     """Parallel server (like v3) + fed-averaged clients each round."""
 
     def __init__(self, adapter, opt_factory, n_clients, schedule="ac",
-                 transport=None):
-        super().__init__(adapter, opt_factory, n_clients, schedule, transport)
+                 transport=None, privacy=None):
+        super().__init__(adapter, opt_factory, n_clients, schedule,
+                         transport, privacy)
         self.name = f"sflv1_{schedule}"
 
     def _end_of_epoch(self, state):

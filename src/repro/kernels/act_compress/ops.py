@@ -15,8 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels.act_compress.act_compress import (dequantize_pallas,
                                                      quantize_pallas)
-
-_INTERPRET = jax.default_backend() != "tpu"
+from repro.kernels.compat import INTERPRET as _INTERPRET
 
 
 @jax.jit

@@ -2,11 +2,18 @@
 
 ``pltpu.TPUCompilerParams`` (jax <= 0.4.x) was renamed to
 ``pltpu.CompilerParams`` in later releases; resolve whichever exists once.
+
+``INTERPRET`` is the shared interpret-mode default for every kernel's ops
+layer: off-TPU backends (CPU CI, GPU dev boxes) run the kernels through the
+Pallas interpreter so the whole suite stays runnable anywhere.
 """
 
 from __future__ import annotations
 
+import jax
 import jax.experimental.pallas.tpu as pltpu
 
 CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
     pltpu, "TPUCompilerParams")
+
+INTERPRET = jax.default_backend() != "tpu"

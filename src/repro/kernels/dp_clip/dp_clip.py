@@ -1,0 +1,78 @@
+"""Per-example gradient clip + accumulate — Pallas TPU kernels (DP-SGD).
+
+DP-SGD's hot path is, for a batch of per-example gradients g_1..g_B:
+
+    s_b   = min(1, C / ||g_b||_2)          (per-example clip factor)
+    G     = sum_b s_b * g_b                (clipped sum, then noise+mean)
+
+Materializing the CLIPPED per-example gradient tree costs another B x |params|
+of HBM.  These kernels keep the reduction on-chip: per-example squared norms
+are accumulated across feature blocks in a single VMEM pass, and the clipped
+sum is a scale-fused batch reduction that writes only the (D,) accumulator —
+the scaled per-example gradients never exist in HBM.
+
+Tiling: both kernels grid over feature blocks of the (B, D) per-example
+gradient matrix (leaves are flattened and processed leaf-by-leaf by the ops
+layer so cross-leaf norms compose).  ``sqnorm`` accumulates into a (B, 1)
+column across grid steps ("arbitrary" semantics — same revisiting-output
+pattern as flash-attention's softmax state); ``scale_accum`` reduces the
+batch axis per feature block ("parallel" — blocks are independent).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.compat import CompilerParams
+
+
+def _sqnorm_kernel(g_ref, out_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+    g = g_ref[...].astype(jnp.float32)
+    out_ref[...] += jnp.sum(g * g, axis=-1, keepdims=True)
+
+
+def _scale_accum_kernel(g_ref, s_ref, out_ref):
+    g = g_ref[...].astype(jnp.float32)
+    out_ref[...] = jnp.sum(g * s_ref[...], axis=0, keepdims=True)
+
+
+def sqnorms_pallas(g, *, block_d=512, interpret=True):
+    """g: (B, D) -> (B, 1) f32 per-example sums of squares."""
+    b, d = g.shape
+    block_d = min(block_d, d)
+    assert d % block_d == 0
+    grid = (d // block_d,)
+    return pl.pallas_call(
+        _sqnorm_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((b, block_d), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((b, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(g)
+
+
+def scale_accum_pallas(g, scales, *, block_d=512, interpret=True):
+    """g: (B, D), scales: (B, 1) -> (1, D) f32 of sum_b scales[b] * g[b]."""
+    b, d = g.shape
+    block_d = min(block_d, d)
+    assert d % block_d == 0
+    grid = (d // block_d,)
+    return pl.pallas_call(
+        _scale_accum_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((b, block_d), lambda i: (0, i)),
+                  pl.BlockSpec((b, 1), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, block_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, d), jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(g, scales)

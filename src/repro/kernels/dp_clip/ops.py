@@ -1,0 +1,73 @@
+"""Jitted pytree-level wrapper around the dp_clip Pallas kernels.
+
+``clip_accumulate`` is the DP-SGD hot path: per-example gradient pytree in,
+(clipped sum, per-example norms) out.  Norms compose ACROSS leaves (the clip
+factor is one scalar per example over the whole parameter vector), so the
+ops layer runs the squared-norm kernel leaf-by-leaf, combines, and feeds the
+shared scale column to the scale-fused accumulation kernel.
+
+Leaves are zero-padded to kernel tiles (batch to sublane multiples, features
+to lane multiples); zero rows/columns contribute nothing to norms or sums.
+Off-TPU the kernels run in interpret mode (``kernels.compat.INTERPRET``).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.compat import INTERPRET as _INTERPRET
+from repro.kernels.dp_clip.dp_clip import scale_accum_pallas, sqnorms_pallas
+from repro.kernels.dp_clip.ref import clip_scales
+
+
+def _pad2d(x, row_mult=8, col_mult=128):
+    b, d = x.shape
+    pb, pd = (-b) % row_mult, (-d) % col_mult
+    if pb or pd:
+        x = jnp.pad(x, ((0, pb), (0, pd)))
+    return x
+
+
+def _block(d: int) -> int:
+    """Largest lane-aligned feature block that tiles ``d`` exactly."""
+    for cand in (512, 384, 256, 128):
+        if d % cand == 0:
+            return cand
+    return d
+
+
+def _flat(leaf):
+    return leaf.reshape(leaf.shape[0], -1)
+
+
+@partial(jax.jit, static_argnames=("clip_norm",))
+def clip_accumulate(per_example_grads, clip_norm: float):
+    """Pytree of (B, ...) per-example grads -> (clipped-sum tree, (B,) norms).
+
+    ``clip_norm`` is static (from PrivacyConfig); ``inf`` disables clipping
+    but still fuses the batch reduction.
+    """
+    leaves, treedef = jax.tree.flatten(per_example_grads)
+    b = leaves[0].shape[0]
+
+    sq = jnp.zeros((b, 1), jnp.float32)
+    padded = []
+    for l in leaves:
+        x = _pad2d(_flat(l))
+        padded.append(x)
+        sq += sqnorms_pallas(x, block_d=_block(x.shape[1]),
+                             interpret=_INTERPRET)[:b]
+    scales = clip_scales(sq, clip_norm)
+    s_pad = jnp.pad(scales, ((0, padded[0].shape[0] - b), (0, 0)))
+
+    sums = []
+    for l, x in zip(leaves, padded):
+        acc = scale_accum_pallas(x, s_pad[:x.shape[0]],
+                                 block_d=_block(x.shape[1]),
+                                 interpret=_INTERPRET)
+        sums.append(acc[0, :_flat(l).shape[1]].reshape(l.shape[1:]))
+    norms = jnp.sqrt(jnp.maximum(sq, 0.0)).reshape(-1)
+    return jax.tree.unflatten(treedef, sums), norms

@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the dp_clip kernels (materializes everything)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def sqnorms_ref(g):
+    """g: (B, D) -> (B, 1) per-example sums of squares."""
+    g = g.astype(jnp.float32)
+    return jnp.sum(g * g, axis=-1, keepdims=True)
+
+
+def scale_accum_ref(g, scales):
+    """g: (B, D), scales: (B, 1) -> (1, D) of sum_b scales[b] * g[b]."""
+    return jnp.sum(g.astype(jnp.float32) * scales, axis=0, keepdims=True)
+
+
+def clip_scales(sq_norms, clip_norm):
+    """min(1, C/||g||) from per-example squared norms; C=inf -> all ones."""
+    norms = jnp.sqrt(jnp.maximum(sq_norms, 0.0))
+    if not math.isfinite(clip_norm):
+        return jnp.ones_like(norms)
+    return jnp.minimum(1.0, clip_norm / jnp.maximum(norms, 1e-12))
+
+
+def clip_accumulate_ref(per_example_grads, clip_norm):
+    """Reference for the whole fused path over a per-example grad PYTREE.
+
+    per_example_grads: pytree whose leaves carry a leading batch axis B.
+    Returns (clipped-sum tree [no batch axis], (B,) per-example L2 norms).
+    """
+    leaves = jax.tree.leaves(per_example_grads)
+    b = leaves[0].shape[0]
+    sq = sum(sqnorms_ref(l.reshape(b, -1)) for l in leaves)
+    scales = clip_scales(sq, clip_norm)
+
+    def leaf_sum(l):
+        flat = l.reshape(b, -1).astype(jnp.float32)
+        return scale_accum_ref(flat, scales).reshape(l.shape[1:])
+
+    out = jax.tree.map(leaf_sum, per_example_grads)
+    return out, jnp.sqrt(jnp.maximum(sq, 0.0)).reshape(-1)

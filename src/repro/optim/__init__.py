@@ -4,9 +4,11 @@ API mirrors optax: ``opt = adam(1e-4); state = opt.init(params);
 updates, state = opt.update(grads, state, params); params = apply_updates(...)``.
 """
 
-from repro.optim.optimizers import (adam, sgd, apply_updates, clip_by_global_norm,
-                                    chain, Optimizer)
+from repro.optim.optimizers import (adam, add_noise, sgd, apply_updates,
+                                    clip_by_global_norm, chain, Optimizer,
+                                    tree_gaussian_noise)
 from repro.optim.schedules import constant, cosine_warmup, wsd
 
-__all__ = ["adam", "sgd", "apply_updates", "clip_by_global_norm", "chain",
-           "Optimizer", "constant", "cosine_warmup", "wsd"]
+__all__ = ["adam", "add_noise", "sgd", "apply_updates",
+           "clip_by_global_norm", "chain", "Optimizer",
+           "tree_gaussian_noise", "constant", "cosine_warmup", "wsd"]

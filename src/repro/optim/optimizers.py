@@ -86,6 +86,36 @@ def clip_by_global_norm(max_norm: float) -> Optimizer:
     return Optimizer(init, update)
 
 
+def tree_gaussian_noise(tree, key, std: float):
+    """``tree + N(0, std^2)`` leaf-wise, one key split per leaf, original
+    leaf dtypes preserved.  Shared by ``add_noise`` and repro.privacy."""
+    if std <= 0:
+        return tree
+    leaves, treedef = jax.tree.flatten(tree)
+    ks = jax.random.split(key, len(leaves))
+    noised = [l + (std * jax.random.normal(k, l.shape,
+                                           jnp.float32)).astype(l.dtype)
+              for l, k in zip(leaves, ks)]
+    return jax.tree.unflatten(treedef, noised)
+
+
+def add_noise(std: float, seed: int = 0) -> Optimizer:
+    """Additive iid Gaussian gradient noise (``chain`` AFTER clipping for a
+    DP-style update rule; repro.privacy's per-example DP-SGD noises the
+    clipped SUM instead — this transform is the coarse batch-level cousin).
+    The PRNG key lives in the optimizer state and advances every update."""
+    def init(params):
+        return {"key": jax.random.key(seed)}
+
+    def update(grads, state, params=None):
+        if std <= 0:
+            return grads, state
+        key, sub = jax.random.split(state["key"])
+        return tree_gaussian_noise(grads, sub, std), {"key": key}
+
+    return Optimizer(init, update)
+
+
 def chain(*opts: Optimizer) -> Optimizer:
     def init(params):
         return tuple(o.init(params) for o in opts)

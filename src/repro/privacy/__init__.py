@@ -1,0 +1,41 @@
+"""repro.privacy — the paper's missing title axis, made measurable.
+
+The comparison is of *privacy-preserving* methods, yet AUROC/bytes/seconds
+never touch privacy.  This subsystem enforces it and measures it:
+
+  * ``dpsgd``      — PrivacyConfig + per-example clip/noise gradients
+                     (fused Pallas kernel in ``kernels/dp_clip``) and
+                     cut-layer activation noise.
+  * ``accountant`` — RDP/moments accountant composing (eps, delta) across
+                     FL rounds, SL client turns and SplitFed epochs,
+                     reported PER HOSPITAL.
+  * ``leakage``    — No-Peek cut-layer metrics: distance correlation and
+                     linear reconstruction / label probes, evaluated on
+                     exactly what crosses the ``repro.wire`` transport.
+  * ``secagg``     — pairwise-mask secure aggregation for FedAvg with
+                     exact modular cancellation and metered mask-exchange
+                     bytes.
+
+Entry points: ``make_strategy(..., privacy=PrivacyConfig(...))``,
+``benchmarks/privacy_sweep.py``, ``examples/private_splitfed.py``.
+"""
+
+from repro.privacy.accountant import (DEFAULT_ORDERS, RDPAccountant,
+                                      epoch_steps, epsilon, rdp_to_eps,
+                                      rdp_sampled_gaussian)
+from repro.privacy.dpsgd import (PrivacyConfig, cut_noise_boundary,
+                                 dp_value_and_grad, per_example_grads)
+from repro.privacy.leakage import (distance_correlation, label_probe_auc,
+                                   measure_leakage, reconstruction_probe,
+                                   smashed_activations)
+from repro.privacy.secagg import SecAgg
+
+__all__ = [
+    "PrivacyConfig", "dp_value_and_grad", "per_example_grads",
+    "cut_noise_boundary",
+    "RDPAccountant", "epsilon", "epoch_steps", "rdp_sampled_gaussian",
+    "rdp_to_eps", "DEFAULT_ORDERS",
+    "distance_correlation", "measure_leakage", "reconstruction_probe",
+    "label_probe_auc", "smashed_activations",
+    "SecAgg",
+]

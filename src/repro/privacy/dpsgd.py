@@ -1,0 +1,165 @@
+"""DP-SGD — per-example clipping + Gaussian noising of gradients.
+
+``PrivacyConfig`` is the single knob threaded through ``make_strategy`` and
+the jitted step builders in ``core/strategies/base.py``.  Two mechanisms,
+composable (see DESIGN.md §8 for the threat model):
+
+  * **DP-SGD** (``clip_norm``/``noise_multiplier``): per-example gradients
+    via ``jax.vmap(jax.grad(...))`` over a singleton batch axis, clipped and
+    batch-reduced by the fused Pallas kernel in ``kernels/dp_clip`` (the
+    clipped per-example tree never hits HBM), then ``N(0, (sigma*C)^2)``
+    noise on the SUM before the 1/B mean.  Guarantees are per-hospital and
+    composed by ``privacy.accountant``.
+  * **Cut-layer noise** (``cut_noise_std``): Gaussian noise added to the
+    smashed activations at every segment boundary — Li et al.'s mitigation
+    for the No-Peek server-inference risk, measured by ``privacy.leakage``.
+
+With ``noise_multiplier=0`` and ``clip_norm=inf`` the DP path reduces to
+exact per-example-mean gradients — numerically the non-private step
+(asserted in ``tests/test_privacy.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+
+from repro import optim as O
+
+
+@dataclasses.dataclass(frozen=True)
+class PrivacyConfig:
+    """Privacy mechanisms for one training run.
+
+    noise_multiplier : sigma of the DP-SGD Gaussian mechanism (noise std is
+                       ``sigma * clip_norm`` on the clipped gradient SUM).
+    clip_norm        : per-example L2 clip C; ``inf`` disables clipping.
+    delta            : target delta for the (eps, delta) report.
+    cut_noise_std    : std of Gaussian noise on cut-layer activations
+                       (SL/SFL families only; 0 disables).
+    secagg           : pairwise-mask secure aggregation for FedAvg uploads.
+    seed             : base seed for all privacy randomness.
+    use_kernel       : fused Pallas clip kernel vs the jnp reference.
+    force_dp         : run the DP-SGD machinery even with neutral
+                       parameters (noise 0 / clip inf) — used to assert the
+                       DP path reduces to the non-private step exactly.
+    """
+    noise_multiplier: float = 0.0
+    clip_norm: float = math.inf
+    delta: float = 1e-5
+    cut_noise_std: float = 0.0
+    secagg: bool = False
+    seed: int = 0
+    use_kernel: bool = True
+    force_dp: bool = False
+
+    def __post_init__(self):
+        if self.noise_multiplier > 0 and not math.isfinite(self.clip_norm):
+            raise ValueError(
+                "noise_multiplier > 0 with clip_norm=inf has unbounded "
+                "sensitivity — no (eps, delta) statement exists; set a "
+                "finite clip_norm")
+
+    @property
+    def dp_enabled(self) -> bool:
+        return (self.noise_multiplier > 0 or math.isfinite(self.clip_norm)
+                or self.force_dp)
+
+    @property
+    def any_enabled(self) -> bool:
+        return self.dp_enabled or self.cut_noise_std > 0 or self.secagg
+
+
+def keyed(loss_fn):
+    """Lift ``loss_fn(params, batch)`` to the keyed 3-arg signature."""
+    return lambda params, batch, key: loss_fn(params, batch)
+
+
+def _expand_batch(batch):
+    """(B, ...) batch dict -> per-example batches of size 1 along axis 0."""
+    return jax.tree.map(lambda v: v[:, None], batch)
+
+
+def per_example_grads(loss_fn, params, batch, keys):
+    """vmap'd (loss, grad) over singleton sub-batches.
+
+    ``loss_fn(params, batch, key) -> scalar`` must be a per-batch MEAN, so
+    a size-1 batch yields that example's own loss/gradient; ``keys`` is a
+    (B,)-keyed array giving each example independent noise (cut-layer
+    noise draws must be iid across examples).  Returns ((B,) losses, grad
+    tree with leading batch axis).
+    """
+    def one(b, k):
+        return jax.value_and_grad(loss_fn)(params, b, k)
+    return jax.vmap(one)(_expand_batch(batch), keys)
+
+
+def dp_value_and_grad(loss_fn, cfg: PrivacyConfig):
+    """DP analogue of ``jax.value_and_grad``.
+
+    ``loss_fn(params, batch, key) -> scalar`` (use ``keyed`` to lift a
+    keyless loss).  Returns ``fn(params, batch, key) -> (mean loss, noisy
+    clipped mean grad)``: ``(sum_b clip(g_b) + sigma*C*z) / B`` with
+    ``z ~ N(0, I)`` — the standard Abadi et al. DP-SGD estimator.
+    """
+    if cfg.use_kernel:
+        from repro.kernels.dp_clip.ops import clip_accumulate
+        clip_fn = lambda g: clip_accumulate(g, float(cfg.clip_norm))
+    else:
+        from repro.kernels.dp_clip.ref import clip_accumulate_ref
+        clip_fn = lambda g: clip_accumulate_ref(g, float(cfg.clip_norm))
+
+    # PrivacyConfig rejects noise > 0 with clip inf (unbounded sensitivity)
+    noise_std = float(cfg.noise_multiplier) * float(cfg.clip_norm) \
+        if cfg.noise_multiplier > 0 else 0.0
+
+    def fn(params, batch, key):
+        b = jax.tree.leaves(batch)[0].shape[0]
+        ex_key, noise_key = jax.random.split(key)
+        losses, grads = per_example_grads(loss_fn, params, batch,
+                                          jax.random.split(ex_key, b))
+        summed, _ = clip_fn(grads)
+        summed = O.tree_gaussian_noise(summed, noise_key, noise_std)
+        grad = jax.tree.map(lambda s, p: (s / b).astype(p.dtype),
+                            summed, params)
+        return losses.mean(), grad
+
+    return fn
+
+
+def cut_noise_boundary(base_boundary, cut_noise_std: float):
+    """Wrap a transport boundary fn with additive Gaussian cut-layer noise.
+
+    Returns ``fn(tree, key)``; noise rides AFTER the codec roundtrip — the
+    client adds it to exactly what ships, so the server (and the leakage
+    probe) only ever sees the noised payload.
+    """
+    std = float(cut_noise_std)
+
+    def fn(tree, key):
+        if base_boundary is not None:
+            tree = base_boundary(tree)
+        return O.tree_gaussian_noise(tree, key, std)
+
+    return fn
+
+
+def boundary_with_key(base_boundary, cfg: PrivacyConfig, key):
+    """Bind a step key into a ``boundary(tree)`` hook for full_loss.
+
+    Each boundary crossing folds a fresh trace-time counter into ``key`` so
+    front->middle and middle->tail draws are independent.
+    """
+    if cfg is None or cfg.cut_noise_std <= 0:
+        return base_boundary
+    noised = cut_noise_boundary(base_boundary, cfg.cut_noise_std)
+    crossing = [0]
+
+    def fn(tree):
+        k = jax.random.fold_in(key, crossing[0])
+        crossing[0] += 1
+        return noised(tree, k)
+
+    return fn

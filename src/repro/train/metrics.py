@@ -29,16 +29,23 @@ def auroc(labels, scores) -> float:
 
 
 def auprc(labels, scores) -> float:
-    """Average precision (step-wise integration of the PR curve)."""
+    """Average precision (step-wise integration of the PR curve).
+
+    Tied scores are integrated as ONE threshold group (sklearn's
+    convention), so the value is invariant to the input ordering of ties.
+    """
     labels = np.asarray(labels).astype(bool).ravel()
     scores = np.asarray(scores, np.float64).ravel()
-    if labels.sum() == 0:
+    n_pos = labels.sum()
+    if n_pos == 0:
         return float("nan")
     order = np.argsort(-scores, kind="mergesort")
-    lab = labels[order]
-    tp = np.cumsum(lab)
-    precision = tp / np.arange(1, len(lab) + 1)
-    return float((precision * lab).sum() / labels.sum())
+    lab, s = labels[order], scores[order]
+    ends = np.append(np.where(np.diff(s))[0], len(s) - 1)   # group ends
+    tp = np.cumsum(lab)[ends]
+    precision = tp / (ends + 1.0)
+    recall_delta = np.diff(np.concatenate([[0], tp])) / n_pos
+    return float((precision * recall_delta).sum())
 
 
 def confusion(labels, scores, threshold=0.5):
@@ -65,8 +72,40 @@ def kappa(labels, scores, threshold=0.5) -> float:
     return float((po - pe) / (1 - pe)) if pe < 1 else float("nan")
 
 
+def sensitivity(labels, scores, threshold=0.5) -> float:
+    """True positive rate (recall) — the screening-critical number."""
+    tp, _, fn, _ = confusion(labels, scores, threshold)
+    return float(tp / (tp + fn)) if tp + fn else float("nan")
+
+
+def specificity(labels, scores, threshold=0.5) -> float:
+    """True negative rate."""
+    _, fp, _, tn = confusion(labels, scores, threshold)
+    return float(tn / (tn + fp)) if tn + fp else float("nan")
+
+
+def expected_calibration_error(labels, scores, n_bins=10) -> float:
+    """ECE: confidence-weighted |accuracy - confidence| over equal-width
+    probability bins (Guo et al. 2017, binary form on P(y=1))."""
+    labels = np.asarray(labels).astype(np.float64).ravel()
+    scores = np.asarray(scores, np.float64).ravel()
+    if len(labels) == 0:
+        return float("nan")
+    bins = np.clip((scores * n_bins).astype(int), 0, n_bins - 1)
+    ece = 0.0
+    for b in range(n_bins):
+        sel = bins == b
+        if not sel.any():
+            continue
+        ece += sel.mean() * abs(labels[sel].mean() - scores[sel].mean())
+    return float(ece)
+
+
 def all_metrics(labels, scores, threshold=0.5) -> dict:
     return {"auroc": auroc(labels, scores),
             "auprc": auprc(labels, scores),
             "f1": f1_score(labels, scores, threshold),
-            "kappa": kappa(labels, scores, threshold)}
+            "kappa": kappa(labels, scores, threshold),
+            "sensitivity": sensitivity(labels, scores, threshold),
+            "specificity": specificity(labels, scores, threshold),
+            "ece": expected_calibration_error(labels, scores)}

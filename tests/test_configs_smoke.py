@@ -26,7 +26,15 @@ def _smoke_batch(cfg, key, batch=2, seq=32):
     return b
 
 
-@pytest.mark.parametrize("arch_id", ARCH_IDS)
+# the biggest smoke configs dominate tier-1 wall-clock; the slow job
+# still runs them on every push
+_HEAVY_SMOKE = {"zamba2-7b", "kimi-k2-1t-a32b", "musicgen-medium",
+                "minicpm-2b"}
+
+
+@pytest.mark.parametrize("arch_id", [
+    pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY_SMOKE else a
+    for a in ARCH_IDS])
 def test_smoke_forward(arch_id):
     cfg = REGISTRY[arch_id].smoke
     model = TransformerLM.build(cfg)
@@ -41,6 +49,7 @@ def test_smoke_forward(arch_id):
     assert bool(jnp.isfinite(aux)), arch_id
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch_id", ARCH_IDS)
 def test_smoke_train_step(arch_id):
     cfg = REGISTRY[arch_id].smoke
@@ -65,6 +74,7 @@ def test_smoke_train_step(arch_id):
     assert delta > 0, arch_id
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch_id", ["mamba2-130m", "zamba2-7b",
                                      "smollm-135m"])
 def test_smoke_decode(arch_id):

@@ -15,8 +15,9 @@ from repro.kernels.act_compress.ref import quantize_ref, roundtrip_ref
 
 
 @pytest.mark.parametrize("b,h,kv,s,d", [
-    (1, 2, 1, 128, 64), (2, 4, 2, 256, 64), (1, 8, 8, 128, 128),
-    (1, 4, 1, 512, 32),
+    (1, 2, 1, 128, 64), (2, 4, 2, 256, 64),
+    pytest.param(1, 8, 8, 128, 128, marks=pytest.mark.slow),
+    pytest.param(1, 4, 1, 512, 32, marks=pytest.mark.slow),
 ])
 @pytest.mark.parametrize("causal", [True, False])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -35,8 +36,10 @@ def test_flash_attention(b, h, kv, s, d, causal, dtype):
 
 
 @pytest.mark.parametrize("b,l,h,p,g,n,q", [
-    (1, 64, 2, 16, 1, 16, 16), (2, 128, 4, 32, 2, 32, 32),
-    (1, 256, 8, 64, 1, 128, 128), (1, 96, 3, 16, 1, 64, 32),
+    (1, 64, 2, 16, 1, 16, 16),
+    pytest.param(2, 128, 4, 32, 2, 32, 32, marks=pytest.mark.slow),
+    pytest.param(1, 256, 8, 64, 1, 128, 128, marks=pytest.mark.slow),
+    (1, 96, 3, 16, 1, 64, 32),
 ])
 def test_ssd_kernel(b, l, h, p, g, n, q):
     ks = jax.random.split(jax.random.key(0), 4)

@@ -1,0 +1,164 @@
+"""Metrics cross-checks: rank AUROC / grouped AUPRC vs brute-force O(n^2)
+and trapezoid references, tie-heavy and degenerate inputs included; the new
+sensitivity / specificity / ECE satellites."""
+
+import numpy as np
+import pytest
+
+from repro.train.metrics import (all_metrics, auprc, auroc, confusion,
+                                 expected_calibration_error, sensitivity,
+                                 specificity)
+
+
+# ---------------------------------------------------------------------------
+# brute-force references
+# ---------------------------------------------------------------------------
+
+def auroc_bruteforce(labels, scores):
+    """O(n^2) Mann-Whitney: P(s_pos > s_neg) + 0.5 P(s_pos == s_neg)."""
+    labels = np.asarray(labels).astype(bool).ravel()
+    scores = np.asarray(scores, np.float64).ravel()
+    pos, neg = scores[labels], scores[~labels]
+    if len(pos) == 0 or len(neg) == 0:
+        return float("nan")
+    wins = (pos[:, None] > neg[None, :]).sum()
+    ties = (pos[:, None] == neg[None, :]).sum()
+    return float((wins + 0.5 * ties) / (len(pos) * len(neg)))
+
+
+def auprc_bruteforce(labels, scores):
+    """Step-integrated AP over DISTINCT thresholds (tie-grouped)."""
+    labels = np.asarray(labels).astype(bool).ravel()
+    scores = np.asarray(scores, np.float64).ravel()
+    n_pos = labels.sum()
+    if n_pos == 0:
+        return float("nan")
+    ap, prev_tp = 0.0, 0
+    for t in sorted(set(scores), reverse=True):
+        sel = scores >= t
+        tp = int((labels & sel).sum())
+        precision = tp / int(sel.sum())
+        ap += precision * (tp - prev_tp) / n_pos
+        prev_tp = tp
+    return float(ap)
+
+
+def _cases(seed):
+    rng = np.random.default_rng(seed)
+    n = rng.integers(5, 60)
+    labels = rng.integers(0, 2, n).astype(float)
+    kind = seed % 3
+    if kind == 0:
+        scores = rng.uniform(0, 1, n)                      # continuous
+    elif kind == 1:
+        scores = rng.choice([0.1, 0.5, 0.9], n)            # tie-heavy
+    else:
+        scores = np.round(rng.uniform(0, 1, n), 1)         # quantized ties
+    return labels, scores
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_auroc_matches_bruteforce(seed):
+    labels, scores = _cases(seed)
+    if labels.sum() in (0, len(labels)):
+        labels[0], labels[-1] = 1.0, 0.0
+    np.testing.assert_allclose(auroc(labels, scores),
+                               auroc_bruteforce(labels, scores),
+                               atol=1e-12)
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_auprc_matches_bruteforce(seed):
+    labels, scores = _cases(seed)
+    if labels.sum() == 0:
+        labels[0] = 1.0
+    np.testing.assert_allclose(auprc(labels, scores),
+                               auprc_bruteforce(labels, scores),
+                               atol=1e-12)
+
+
+def test_auprc_tie_order_invariant():
+    """Tied scores must yield the same AP whatever the input order."""
+    labels = np.array([1, 0, 1, 0, 0, 1])
+    scores = np.array([0.5, 0.5, 0.5, 0.2, 0.2, 0.2])
+    base = auprc(labels, scores)
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        perm = rng.permutation(len(labels))
+        np.testing.assert_allclose(auprc(labels[perm], scores[perm]), base,
+                                   atol=1e-12)
+
+
+def test_all_ties_collapse_to_prevalence():
+    labels = np.array([1, 1, 0, 0, 0, 0, 0, 0])
+    scores = np.full(8, 0.7)
+    assert auroc(labels, scores) == 0.5
+    np.testing.assert_allclose(auprc(labels, scores), 0.25)  # prevalence
+
+
+def test_degenerate_single_class():
+    scores = np.linspace(0, 1, 10)
+    assert np.isnan(auroc(np.zeros(10), scores))
+    assert np.isnan(auroc(np.ones(10), scores))
+    assert np.isnan(auprc(np.zeros(10), scores))
+    assert auprc(np.ones(10), scores) == 1.0
+    assert np.isnan(auroc_bruteforce(np.zeros(10), scores))
+
+
+def test_perfect_and_inverted_ranking():
+    labels = np.array([0, 0, 0, 1, 1])
+    scores = np.array([0.1, 0.2, 0.3, 0.8, 0.9])
+    assert auroc(labels, scores) == 1.0
+    assert auprc(labels, scores) == 1.0
+    assert auroc(labels, 1 - scores) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# sensitivity / specificity / ECE
+# ---------------------------------------------------------------------------
+
+def test_sensitivity_specificity_from_confusion():
+    labels = np.array([1, 1, 1, 0, 0, 0, 0, 1])
+    scores = np.array([0.9, 0.8, 0.2, 0.1, 0.7, 0.3, 0.4, 0.6])
+    tp, fp, fn, tn = confusion(labels, scores)
+    assert (tp, fp, fn, tn) == (3, 1, 1, 3)
+    assert sensitivity(labels, scores) == 0.75
+    assert specificity(labels, scores) == 0.75
+
+
+def test_sensitivity_specificity_degenerate():
+    assert np.isnan(sensitivity(np.zeros(4), np.linspace(0, 1, 4)))
+    assert np.isnan(specificity(np.ones(4), np.linspace(0, 1, 4)))
+
+
+def test_ece_perfectly_calibrated_bins():
+    # within each bin, score == empirical frequency -> ECE == 0
+    labels = np.array([1, 0, 1, 0] * 25)
+    scores = np.full(100, 0.5)
+    np.testing.assert_allclose(expected_calibration_error(labels, scores),
+                               0.0, atol=1e-12)
+
+
+def test_ece_maximally_miscalibrated():
+    labels = np.zeros(50)
+    scores = np.full(50, 0.95)          # confident and always wrong
+    np.testing.assert_allclose(expected_calibration_error(labels, scores),
+                               0.95, atol=1e-12)
+
+
+def test_ece_empty_and_bounds():
+    assert np.isnan(expected_calibration_error(np.array([]),
+                                               np.array([])))
+    rng = np.random.default_rng(1)
+    labels = rng.integers(0, 2, 200)
+    scores = rng.uniform(0, 1, 200)
+    assert 0.0 <= expected_calibration_error(labels, scores) <= 1.0
+
+
+def test_all_metrics_has_new_keys():
+    labels = np.array([1, 0, 1, 0, 1])
+    scores = np.array([0.9, 0.2, 0.7, 0.4, 0.3])
+    m = all_metrics(labels, scores)
+    for k in ("auroc", "auprc", "f1", "kappa", "sensitivity",
+              "specificity", "ece"):
+        assert k in m

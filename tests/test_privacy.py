@@ -1,0 +1,407 @@
+"""repro.privacy: DP-SGD kernel/equivalence, accountant, leakage, secagg."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim as O
+from repro.core.partition import cnn_adapter
+from repro.core.strategies import make_strategy
+from repro.data.synthetic import make_cxr_clients
+from repro.kernels.dp_clip.ops import clip_accumulate
+from repro.kernels.dp_clip.ref import clip_accumulate_ref
+from repro.models.cnn import DenseNetConfig, build_densenet
+from repro.privacy import (PrivacyConfig, RDPAccountant, SecAgg,
+                           distance_correlation, dp_value_and_grad,
+                           epsilon, measure_leakage, reconstruction_probe)
+from repro.privacy.dpsgd import keyed
+
+
+# ---------------------------------------------------------------------------
+# fused Pallas clip kernel vs reference (interpret mode)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shapes", [
+    [(6, 8, 16)], [(3, 130), (3, 7)], [(16, 4, 4, 3), (16, 640), (16, 1)],
+])
+@pytest.mark.parametrize("clip", [0.05, 1.0, float("inf")])
+def test_clip_kernel_matches_ref(shapes, clip):
+    ks = jax.random.split(jax.random.key(0), len(shapes))
+    tree = {f"l{i}": jax.random.normal(k, s) * 3
+            for i, (k, s) in enumerate(zip(ks, shapes))}
+    out, norms = clip_accumulate(tree, clip)
+    ref, rnorms = clip_accumulate_ref(tree, clip)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(norms), np.asarray(rnorms),
+                               rtol=1e-5)
+
+
+def test_clip_kernel_bounds_every_example():
+    """After clipping, every per-example contribution has norm <= C."""
+    g = jax.random.normal(jax.random.key(1), (8, 257)) * 10
+    clip = 0.5
+    out, norms = clip_accumulate({"g": g}, clip)
+    scales = np.minimum(1.0, clip / np.asarray(norms))
+    manual = (np.asarray(g) * scales[:, None]).sum(axis=0)
+    np.testing.assert_allclose(np.asarray(out["g"]), manual, atol=1e-5)
+    per_ex = np.linalg.norm(np.asarray(g) * scales[:, None], axis=1)
+    assert (per_ex <= clip + 1e-5).all()
+
+
+def test_clip_kernel_zero_grads():
+    out, norms = clip_accumulate({"g": jnp.zeros((4, 130))}, 1.0)
+    assert np.asarray(norms).max() == 0.0
+    assert np.isfinite(np.asarray(out["g"])).all()
+    np.testing.assert_array_equal(np.asarray(out["g"]),
+                                  np.zeros((130,), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# dp_value_and_grad
+# ---------------------------------------------------------------------------
+
+def _quad_loss(params, batch):
+    pred = batch["x"] @ params["w"]
+    return jnp.mean((pred - batch["y"]) ** 2)
+
+
+def test_dp_grad_neutral_equals_plain():
+    """noise 0 + clip inf: DP estimator == batch gradient."""
+    k = jax.random.key(0)
+    params = {"w": jax.random.normal(k, (5,))}
+    batch = {"x": jax.random.normal(jax.random.key(1), (12, 5)),
+             "y": jax.random.normal(jax.random.key(2), (12,))}
+    cfg = PrivacyConfig(noise_multiplier=0.0, clip_norm=float("inf"),
+                        force_dp=True)
+    loss_dp, g_dp = dp_value_and_grad(keyed(_quad_loss), cfg)(
+        params, batch, jax.random.key(3))
+    loss, g = jax.value_and_grad(_quad_loss)(params, batch)
+    np.testing.assert_allclose(float(loss_dp), float(loss), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(g_dp["w"]), np.asarray(g["w"]),
+                               atol=1e-6)
+
+
+def test_dp_grad_noise_scale():
+    """With zero gradients the DP output IS the noise: std sigma*C/B."""
+    params = {"w": jnp.zeros((2048,))}
+    batch = {"x": jnp.zeros((4, 2048)), "y": jnp.zeros((4,))}
+    sigma, clip = 2.0, 1.5
+    cfg = PrivacyConfig(noise_multiplier=sigma, clip_norm=clip)
+    _, g = dp_value_and_grad(keyed(_quad_loss), cfg)(
+        params, batch, jax.random.key(0))
+    want = sigma * clip / 4
+    assert abs(float(jnp.std(g["w"])) - want) < 0.1 * want
+
+
+def test_dp_grad_deterministic_per_key():
+    params = {"w": jnp.ones((16,))}
+    batch = {"x": jax.random.normal(jax.random.key(1), (4, 16)),
+             "y": jnp.zeros((4,))}
+    cfg = PrivacyConfig(noise_multiplier=1.0, clip_norm=1.0)
+    vg = dp_value_and_grad(keyed(_quad_loss), cfg)
+    _, g1 = vg(params, batch, jax.random.key(7))
+    _, g2 = vg(params, batch, jax.random.key(7))
+    _, g3 = vg(params, batch, jax.random.key(8))
+    np.testing.assert_array_equal(np.asarray(g1["w"]), np.asarray(g2["w"]))
+    assert np.abs(np.asarray(g1["w"]) - np.asarray(g3["w"])).max() > 0
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: neutral DP training == non-private training (acceptance)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    clients = make_cxr_clients(seed=0, train_per_client=24,
+                               val_per_client=12, test_per_client=17,
+                               image_size=16, n_clients=3)
+    cfg = DenseNetConfig(growth=4, blocks=(1, 1), stem_ch=8, cut_layer=1)
+    return clients, cnn_adapter(build_densenet(cfg))
+
+
+def _train(method, clients, adapter, privacy, epochs=1, batch=8):
+    st = make_strategy(method, adapter, lambda: O.adam(1e-3),
+                       len(clients), privacy=privacy)
+    state = st.setup(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    log = None
+    for _ in range(epochs):
+        state, log = st.run_epoch(state, [c.train for c in clients], rng,
+                                  batch)
+    return st, state, log
+
+
+@pytest.mark.parametrize("method", ["fl", "sl_ac", "sflv3_ac"])
+def test_neutral_dp_equals_nonprivate(method, tiny_setup):
+    clients, adapter = tiny_setup
+    neutral = PrivacyConfig(noise_multiplier=0.0, clip_norm=float("inf"),
+                            force_dp=True)
+    _, s_plain, log_plain = _train(method, clients, adapter, None)
+    _, s_dp, log_dp = _train(method, clients, adapter, neutral)
+    assert abs(log_plain.mean_loss - log_dp.mean_loss) < 1e-5
+    st = make_strategy(method, adapter, lambda: O.adam(1e-3),
+                       len(clients))
+    for i in range(len(clients)):
+        pa = st.params_for_eval(s_plain, i)
+        pb = st.params_for_eval(s_dp, i)
+        for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       atol=1e-5)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method", ["fl", "sl_ac", "sflv2_ac", "sflv3_ac"])
+def test_private_training_runs_and_accounts(method, tiny_setup):
+    clients, adapter = tiny_setup
+    priv = PrivacyConfig(noise_multiplier=1.0, clip_norm=1.0,
+                         secagg=method == "fl")
+    st, state, log = _train(method, clients, adapter, priv)
+    assert np.isfinite(log.mean_loss)
+    report = st.privacy_report()
+    assert len(report) == len(clients)
+    for r in report:
+        assert 0 < r["epsilon"] < 50 and r["steps"] > 0
+    m = st.evaluate(state, clients, "test", batch_size=16)
+    assert 0.0 <= m["auroc"] <= 1.0
+
+
+def test_cut_noise_trains_and_reduces_leakage(tiny_setup):
+    clients, adapter = tiny_setup
+    st, state, log = _train(
+        "sl_ac", clients, adapter, PrivacyConfig(cut_noise_std=2.0))
+    assert np.isfinite(log.mean_loss)
+    params = st.params_for_eval(state, 0)
+    batch = {k: v[:16] for k, v in clients[0].test.items()}
+    clean = measure_leakage(adapter, params, batch)
+    noised = measure_leakage(adapter, params, batch,
+                             privacy=PrivacyConfig(cut_noise_std=25.0))
+    assert noised["dcor_input"] < clean["dcor_input"]
+    assert noised["probe"]["r2"] <= clean["probe"]["r2"] + 1e-9
+
+
+def test_scores_partial_batch_not_dropped(tiny_setup):
+    """17 test samples, batch 16: every sample must be scored."""
+    clients, adapter = tiny_setup
+    st, state, _ = _train("fl", clients, adapter, None)
+    s = st.scores(state, 0, clients[0].test, batch_size=16)
+    assert len(s) == len(clients[0].test["label"]) == 17
+    # identical to scoring sample-by-sample with one full batch
+    whole = st.scores(state, 0, clients[0].test, batch_size=17)
+    np.testing.assert_allclose(s, whole, atol=1e-6)
+
+
+def test_noise_without_clip_rejected():
+    """sigma > 0 with clip inf has unbounded sensitivity: no valid eps."""
+    with pytest.raises(ValueError):
+        PrivacyConfig(noise_multiplier=1.0)        # default clip_norm=inf
+
+
+def test_centralized_dp_accounts_every_hospital(tiny_setup):
+    clients, adapter = tiny_setup
+    st, _, _ = _train("centralized", clients, adapter,
+                      PrivacyConfig(noise_multiplier=1.0, clip_norm=1.0))
+    report = st.privacy_report()
+    assert len(report) == len(clients)
+    assert all(0 < r["epsilon"] < 50 for r in report)
+    assert len({round(r["epsilon"], 9) for r in report}) == 1  # pooled q
+
+
+def test_make_strategy_privacy_validation(tiny_setup):
+    clients, adapter = tiny_setup
+    with pytest.raises(ValueError):
+        make_strategy("fl", adapter, lambda: O.adam(1e-3), 3,
+                      privacy=PrivacyConfig(cut_noise_std=1.0))
+    with pytest.raises(ValueError):
+        make_strategy("sl_ac", adapter, lambda: O.adam(1e-3), 3,
+                      privacy=PrivacyConfig(secagg=True))
+
+
+# ---------------------------------------------------------------------------
+# accountant
+# ---------------------------------------------------------------------------
+
+def test_accountant_known_regime():
+    eps = epsilon(1.0, q=0.01, steps=1000, delta=1e-5)
+    assert 1.0 < eps < 4.0            # integer-order RDP, classic conversion
+
+
+def test_accountant_edge_cases():
+    assert math.isinf(epsilon(0.0, 0.1, 10))        # no noise, no guarantee
+    assert epsilon(1.0, 0.0, 10) == 0.0             # never sampled
+    full = epsilon(2.0, 1.0, 1, delta=1e-5)         # q=1: plain Gaussian
+    assert 0 < full < math.inf
+
+
+def test_accountant_monotone():
+    e1 = epsilon(1.0, 0.05, 100)
+    assert epsilon(1.0, 0.05, 200) > e1             # more steps, worse
+    assert epsilon(2.0, 0.05, 100) < e1             # more noise, better
+    assert epsilon(1.0, 0.10, 100) > e1             # more sampling, worse
+
+
+def test_accountant_composition_additive():
+    a = RDPAccountant(1.0, 1e-5)
+    a.step(0.02, 50)
+    b = RDPAccountant(1.0, 1e-5)
+    for _ in range(50):
+        b.step(0.02, 1)
+    np.testing.assert_allclose(a.epsilon()[0], b.epsilon()[0], rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# leakage metrics
+# ---------------------------------------------------------------------------
+
+def test_dcor_dependence_and_independence():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(400, 4))
+    z = rng.normal(size=(400, 4))
+    lin = distance_correlation(x, x * 2.0 + 1.0)
+    sq = distance_correlation(x, x ** 2)          # nonlinear dependence
+    indep = distance_correlation(x, z)            # finite-sample bias ~0.18
+    assert lin > 0.99
+    assert sq > 0.3
+    assert indep < 0.25
+    assert indep < sq < lin
+
+
+def test_dcor_constant_input():
+    x = np.ones((32, 3))
+    assert distance_correlation(x, np.random.default_rng(0)
+                                .normal(size=(32, 2))) == 0.0
+
+
+def test_reconstruction_probe_recovers_linear_map():
+    rng = np.random.default_rng(1)
+    inputs = rng.normal(size=(256, 6))
+    acts = inputs @ rng.normal(size=(6, 12)) + 0.01 * rng.normal(
+        size=(256, 12))
+    probe = reconstruction_probe(acts, inputs)
+    assert probe["r2"] > 0.95
+    noise_probe = reconstruction_probe(rng.normal(size=(256, 12)), inputs)
+    assert noise_probe["r2"] < 0.2
+
+
+# ---------------------------------------------------------------------------
+# secure aggregation
+# ---------------------------------------------------------------------------
+
+def test_secagg_exact_aggregate():
+    rng = np.random.default_rng(2)
+    n = 5
+    trees = [{"w": rng.normal(size=(16, 8)).astype(np.float32),
+              "b": rng.normal(size=(8,)).astype(np.float32)}
+             for _ in range(n)]
+    weights = [5, 1, 3, 2, 4]
+    sa = SecAgg(n, seed=3)
+    agg = sa.aggregate_weighted(trees, weights)
+    for k in ("w", "b"):
+        ref = sum(w * t[k] for w, t in zip(weights, trees)) / sum(weights)
+        np.testing.assert_allclose(agg[k], ref, atol=2 ** -14)
+
+
+def test_secagg_masked_upload_is_garbage():
+    """A single masked upload must not resemble the raw update."""
+    rng = np.random.default_rng(4)
+    tree = {"w": rng.normal(size=(64, 16)).astype(np.float32)}
+    sa = SecAgg(3, seed=5)
+    masked = sa.mask_update(0, tree, 1.0 / 3)
+    u = masked["w"].astype(np.float64) / 2 ** 32
+    assert 0.15 < u.std() < 0.35          # ~uniform on [0, 1)
+    assert abs(np.corrcoef(u.ravel(), tree["w"].ravel())[0, 1]) < 0.1
+
+
+def test_secagg_meters_bytes():
+    trees = [{"w": np.zeros((32, 4), np.float32)} for _ in range(4)]
+    sa = SecAgg(4, seed=0)
+    sa.aggregate_weighted(trees, [1, 1, 1, 1])
+    payload = 4 * 32 * 4 * 4              # clients x elements x 4 bytes
+    assert sa.bytes_on_wire == payload + sa.handshake_bytes()
+    assert sa.handshake_bytes() > 0
+
+
+def test_fedavg_secagg_matches_plain_average(tiny_setup):
+    clients, adapter = tiny_setup
+    _, plain, _ = _train("fl", clients, adapter, None)
+    _, masked, _ = _train("fl", clients, adapter,
+                          PrivacyConfig(secagg=True))
+    for a, b in zip(jax.tree.leaves(plain["params"]),
+                    jax.tree.leaves(masked["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2 ** -12)
+
+
+# ---------------------------------------------------------------------------
+# optim: clip_by_global_norm + chain + the DP noise step (satellite)
+# ---------------------------------------------------------------------------
+
+def test_clip_by_global_norm_scales_exactly():
+    g = {"a": jnp.full((4,), 3.0), "b": jnp.full((3, 4), -2.0)}
+    norm = float(jnp.sqrt(sum(jnp.sum(x * x)
+                              for x in jax.tree.leaves(g))))
+    opt = O.clip_by_global_norm(1.0)
+    out, _ = opt.update(g, opt.init(g))
+    for orig, clipped in zip(jax.tree.leaves(g), jax.tree.leaves(out)):
+        np.testing.assert_allclose(np.asarray(clipped),
+                                   np.asarray(orig) / norm, rtol=1e-6)
+    big, _ = O.clip_by_global_norm(norm * 10).update(g, {})
+    for orig, kept in zip(jax.tree.leaves(g), jax.tree.leaves(big)):
+        np.testing.assert_allclose(np.asarray(kept), np.asarray(orig))
+
+
+def test_clip_by_global_norm_zero_grads():
+    g = {"a": jnp.zeros((8,))}
+    out, _ = O.clip_by_global_norm(1.0).update(g, {})
+    assert np.isfinite(np.asarray(out["a"])).all()
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.zeros(8))
+
+
+def test_chain_clip_then_noise_ordering():
+    """clip->noise: the noise rides on TOP of the clipped gradient (DP
+    ordering); noise->clip: the final update is norm-bounded instead."""
+    g = {"w": jnp.full((512,), 100.0)}
+    clip_noise = O.chain(O.clip_by_global_norm(1.0), O.add_noise(0.5,
+                                                                 seed=1))
+    noise_clip = O.chain(O.add_noise(0.5, seed=1),
+                         O.clip_by_global_norm(1.0))
+    u1, _ = clip_noise.update(g, clip_noise.init(g))
+    u2, _ = noise_clip.update(g, noise_clip.init(g))
+    n1 = float(jnp.linalg.norm(u1["w"]))
+    n2 = float(jnp.linalg.norm(u2["w"]))
+    assert n2 <= 1.0 + 1e-5               # clipped last => bounded
+    assert n1 > 1.0                       # noise after clip => unbounded
+    clipped, _ = O.clip_by_global_norm(1.0).update(g, {})
+    resid = np.asarray(u1["w"]) - np.asarray(clipped["w"])
+    assert abs(resid.std() - 0.5) < 0.1   # the ride-along noise
+
+
+def test_add_noise_zero_std_is_identity_and_key_advances():
+    g = {"w": jnp.arange(8.0)}
+    opt = O.add_noise(0.0)
+    state = opt.init(g)
+    out, state2 = opt.update(g, state)
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(g["w"]))
+    noisy = O.add_noise(1.0, seed=0)
+    s = noisy.init(g)
+    a, s = noisy.update(g, s)
+    b, s = noisy.update(g, s)
+    assert np.abs(np.asarray(a["w"]) - np.asarray(b["w"])).max() > 0
+
+
+def test_chain_with_bf16_adam_state():
+    g = {"w": jnp.ones((16,), jnp.float32)}
+    p = {"w": jnp.zeros((16,), jnp.float32)}
+    opt = O.chain(O.clip_by_global_norm(1.0), O.add_noise(0.1, seed=2),
+                  O.adam(1e-3, state_dtype=jnp.bfloat16))
+    state = opt.init(p)
+    up, state = opt.update(g, state, p)
+    assert state[2]["mu"]["w"].dtype == jnp.bfloat16
+    newp = O.apply_updates(p, up)
+    assert np.isfinite(np.asarray(newp["w"])).all()
+    assert np.abs(np.asarray(newp["w"])).max() > 0

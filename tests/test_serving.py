@@ -3,6 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.models.transformer import ModelConfig, TransformerLM
 from repro.serving.engine import greedy_generate, make_decode_step, \
@@ -17,6 +18,7 @@ def _model(**kw):
     return TransformerLM.build(cfg), cfg
 
 
+@pytest.mark.slow
 def test_prefill_then_decode_matches_full():
     model, cfg = _model()
     params = model.init_params(jax.random.key(0))
@@ -34,6 +36,7 @@ def test_prefill_then_decode_matches_full():
                                rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_sliding_window_ring_cache_matches_full_attention_window():
     """Decode through a window-sized ring cache == windowed attention."""
     model, cfg = _model(sliding_window=4)
@@ -56,6 +59,7 @@ def test_sliding_window_ring_cache_matches_full_attention_window():
                                rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 def test_bulk_prefill_into_ring_cache_then_decode():
     model, cfg = _model(sliding_window=4)
     params = model.init_params(jax.random.key(0))

@@ -346,6 +346,7 @@ def test_transport_accounting_matches_analytic_train_legs():
     assert tp.steps == log.steps
 
 
+@pytest.mark.slow
 def test_training_with_int8_transport_runs_and_compresses():
     from repro import optim as O
     from repro.core.strategies import make_strategy
