@@ -1,0 +1,126 @@
+"""Engine benchmark — stepwise (host-loop) vs compiled (scan/vmap) epochs.
+
+For each method and hospital count, trains the same synthetic CXR task with
+both execution engines and reports steps/sec and epoch wall-clock (median
+over timed epochs, compile/warm-up epoch excluded for BOTH engines — the
+comparison is steady-state dispatch cost, which is what dominates the
+many-hospital sweeps in ROADMAP's production target).
+
+Writes ``benchmarks/results/BENCH_engine.json``:
+
+    {"results": [{"method", "n_clients", "engine", "steps_per_epoch",
+                  "epoch_seconds", "steps_per_sec"}, ...],
+     "speedup": {"fl@10": 7.3, ...}}   # compiled / stepwise steps/sec
+
+  PYTHONPATH=src python -m benchmarks.engine_bench [--smoke]
+      [--methods fl,sl_am,sflv3_ac] [--clients 3,10,50] [--epochs N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro import optim as O
+from repro.core.partition import cnn_adapter
+from repro.core.strategies import make_strategy
+from repro.data.synthetic import make_cxr_clients
+from repro.models.cnn import DenseNetConfig, build_densenet
+
+DEFAULT_METHODS = ["fl", "sl_am", "sflv3_ac"]
+DEFAULT_CLIENTS = [3, 10, 50]
+OUT = os.path.join(os.path.dirname(__file__), "results",
+                   "BENCH_engine.json")
+
+
+def build_setup(n_clients: int, train_per_client: int, image_size: int):
+    """Dispatch-bound regime: per-step compute is kept tiny so the numbers
+    isolate what the engine changes — host dispatch and hospital-axis
+    parallelism — rather than conv throughput."""
+    clients = make_cxr_clients(seed=0, n_clients=n_clients,
+                               train_per_client=train_per_client,
+                               val_per_client=8, test_per_client=8,
+                               image_size=image_size)
+    cfg = DenseNetConfig(growth=2, blocks=(1, 1), stem_ch=4, cut_layer=1)
+    return clients, cnn_adapter(build_densenet(cfg))
+
+
+def time_engine(method, engine, clients, adapter, batch_size, epochs):
+    strat = make_strategy(method, adapter, lambda: O.adam(1e-3),
+                          len(clients), engine=engine)
+    state = strat.setup(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    data = [c.train for c in clients]
+    # warm-up epoch: tracing + compilation for both engines
+    state, log = strat.run_epoch(state, data, rng, batch_size)
+    times = []
+    for _ in range(epochs):
+        jax.block_until_ready(jax.tree.leaves(
+            state.get("params", state.get("server")))[0])
+        t0 = time.perf_counter()
+        state, log = strat.run_epoch(state, data, rng, batch_size)
+        jax.block_until_ready(jax.tree.leaves(
+            state.get("params", state.get("server")))[0])
+        times.append(time.perf_counter() - t0)
+    sec = float(np.median(times))
+    return {"method": method, "n_clients": len(clients), "engine": engine,
+            "steps_per_epoch": log.steps, "epoch_seconds": sec,
+            "steps_per_sec": log.steps / sec if sec > 0 else float("inf")}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid for CI (non-blocking slow job)")
+    ap.add_argument("--methods", default=None)
+    ap.add_argument("--clients", default=None)
+    ap.add_argument("--epochs", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--train-per-client", type=int, default=None)
+    ap.add_argument("--out", default=OUT)
+    args = ap.parse_args()
+
+    methods = (args.methods.split(",") if args.methods
+               else (["fl"] if args.smoke else DEFAULT_METHODS))
+    clients_grid = ([int(x) for x in args.clients.split(",")]
+                    if args.clients else ([3] if args.smoke
+                                          else DEFAULT_CLIENTS))
+    epochs = args.epochs or (1 if args.smoke else 2)
+    tpc = args.train_per_client or (16 if args.smoke else 128)
+
+    results, speedup = [], {}
+    for n in clients_grid:
+        clients, adapter = build_setup(n, tpc, image_size=8)
+        for method in methods:
+            row = {}
+            for engine in ("stepwise", "compiled"):
+                r = time_engine(method, engine, clients, adapter,
+                                args.batch, epochs)
+                results.append(r)
+                row[engine] = r
+                print(f"{method:10s} n={n:3d} {engine:9s} "
+                      f"{r['steps_per_sec']:9.1f} steps/s "
+                      f"({r['epoch_seconds'] * 1e3:8.1f} ms/epoch)")
+            sp = (row["compiled"]["steps_per_sec"]
+                  / row["stepwise"]["steps_per_sec"])
+            speedup[f"{method}@{n}"] = round(sp, 2)
+            print(f"{method:10s} n={n:3d} speedup   {sp:9.2f}x")
+
+    out = {"device": jax.devices()[0].device_kind,
+           "batch_size": args.batch, "train_per_client": tpc,
+           "epochs_timed": epochs, "results": results, "speedup": speedup}
+    out_dir = os.path.dirname(args.out)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

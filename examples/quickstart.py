@@ -26,8 +26,10 @@ def main():
 
     for method in ["sflv3_ac", "sl_ac"]:
         adapter = cnn_adapter(build_densenet(cfg))
+        # whole epochs compile to one XLA program (engine="stepwise" is
+        # the legacy per-batch host loop; both train identically)
         strat = make_strategy(method, adapter, lambda: O.adam(3e-4),
-                              n_clients=len(clients))
+                              n_clients=len(clients), engine="compiled")
         state = strat.setup(jax.random.key(0))
         rng = np.random.default_rng(0)
         t0 = time.time()

@@ -33,23 +33,36 @@ class SplitAdapter:
     apply_seg: Callable[..., Any]              # (seg, seg_params, x, batch, train) -> x
     loss_from_output: Callable[[Any, dict], Any]
     scores_from_output: Callable[[Any], Any]   # output -> probabilities
+    per_example_loss: Callable[[Any, dict], Any] | None = None  # -> (B,)
 
     @property
     def nls(self) -> bool:
         return "tail" in self.seg_names
 
     # -- composition helpers -------------------------------------------------
-    def full_loss(self, params, batch, train=True, boundary=None):
+    def full_loss(self, params, batch, train=True, boundary=None,
+                  weights=None):
         """``boundary``: optional fn applied to every cross-segment
         activation pytree (the repro.wire transport hook — the server sees
-        what actually crossed the wire)."""
+        what actually crossed the wire).  ``weights``: optional (B,)
+        per-example weights — the loss becomes a weighted mean over the
+        per-example losses, which is how the compiled engine masks padding
+        rows out of a pad-and-mask remainder batch."""
         x = self.inputs(batch)
         last = len(self.seg_names) - 1
         for i, seg in enumerate(self.seg_names):
             x = self.apply_seg(seg, params[seg], x, batch, train)
             if boundary is not None and i < last:
                 x = boundary(x)
-        return self.loss_from_output(x, batch)
+        if weights is None:
+            return self.loss_from_output(x, batch)
+        if self.per_example_loss is None:
+            raise ValueError(
+                f"adapter {self.name!r} has no per_example_loss; weighted "
+                "(pad-and-mask) losses need one")
+        pe = self.per_example_loss(x, batch).astype(jnp.float32)
+        w = weights.astype(jnp.float32)
+        return (pe * w).sum() / jnp.maximum(w.sum(), 1.0)
 
     def full_scores(self, params, batch):
         x = self.inputs(batch)
@@ -100,8 +113,15 @@ def cnn_adapter(model) -> SplitAdapter:
     def scores_from_output(out):
         return jax.nn.sigmoid(out.reshape(-1).astype(jnp.float32))
 
+    def per_example_loss(out, batch):
+        logits = out.reshape(-1).astype(jnp.float32)
+        labels = batch["label"].reshape(-1).astype(jnp.float32)
+        return (jnp.maximum(logits, 0) - logits * labels
+                + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
     return SplitAdapter(model.name, tuple(model.seg_names), init, inputs,
-                        apply_seg, loss_from_output, scores_from_output)
+                        apply_seg, loss_from_output, scores_from_output,
+                        per_example_loss)
 
 
 def lm_adapter(model) -> SplitAdapter:
@@ -133,22 +153,59 @@ def lm_adapter(model) -> SplitAdapter:
         total = s + (fe.shape[1] if fe is not None else 0)
         return jnp.broadcast_to(jnp.arange(total, dtype=jnp.int32), (b, total))
 
-    def loss_from_output(logits, batch):
+    def _token_nll(logits, batch):
         labels = batch["tokens"][:, 1:]
         if batch.get("frontend_emb") is not None:
             logits = logits[:, -labels.shape[1]:]
         lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
         ll = jnp.take_along_axis(logits.astype(jnp.float32),
                                  labels[..., None], axis=-1)[..., 0]
-        return (lse - ll).mean()
+        return lse - ll                              # (B, S)
+
+    def loss_from_output(logits, batch):
+        return _token_nll(logits, batch).mean()
+
+    def per_example_loss(logits, batch):
+        return _token_nll(logits, batch).mean(axis=-1)
 
     def scores_from_output(logits):
         return jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
 
     return SplitAdapter(model.cfg.name, seg_names, init, inputs, apply_seg,
-                        loss_from_output, scores_from_output)
+                        loss_from_output, scores_from_output,
+                        per_example_loss)
 
 
 def leaf_bytes(tree) -> int:
     return int(sum(int(np.prod(l.shape)) * l.dtype.itemsize
                    for l in jax.tree.leaves(tree)))
+
+
+# ---------------------------------------------------------------------------
+# stacked-tree helpers — per-client pytrees with a leading hospital axis
+# ---------------------------------------------------------------------------
+
+def stack_trees(trees):
+    """List of identically-shaped pytrees -> one tree with leading axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def unstack_tree(tree, n):
+    """Inverse of ``stack_trees``: leading axis back to a list of trees."""
+    return [jax.tree.map(lambda x: x[i], tree) for i in range(n)]
+
+
+def tree_take(tree, i):
+    """Select hospital ``i``'s slice from a stacked tree (traceable)."""
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def tree_put(tree, i, sub):
+    """Scatter ``sub`` back into hospital ``i``'s slice (traceable)."""
+    return jax.tree.map(lambda x, y: x.at[i].set(y), tree, sub)
+
+
+def tree_select(flag, new, old):
+    """``new`` where ``flag`` (scalar bool) else ``old`` — the pad-and-mask
+    engine's way of turning an invalid (padding) step into a no-op."""
+    return jax.tree.map(lambda a, b: jnp.where(flag, a, b), new, old)

@@ -28,3 +28,16 @@ def alternate_minibatch(n_batches: list[int]) -> list[tuple[int, int]]:
 
 
 SCHEDULES = {"ac": alternate_client, "am": alternate_minibatch}
+
+
+def schedule_array(name: str, n_batches: list[int]):
+    """Schedule as a dense ``[steps, 2]`` int32 array of (client, batch).
+
+    This is the form the compiled engine consumes: a ``lax.scan`` over the
+    leading axis replays the exact interleaving of the Python schedule —
+    AM drop-out of exhausted clients is already folded into the rows, so
+    the scan needs no masking or branching.
+    """
+    import numpy as np
+    rows = SCHEDULES[name](list(n_batches))
+    return np.asarray(rows, dtype=np.int32).reshape(-1, 2)

@@ -8,7 +8,8 @@ from repro.core.strategies.splitfed import SplitFedV1, SplitFedV2, SplitFedV3
 
 
 def make_strategy(method: str, adapter, opt_factory, n_clients,
-                  transport=None, privacy=None):
+                  transport=None, privacy=None, engine="stepwise",
+                  drop_remainder=True, shard=False):
     """method: centralized | fl | sl_{ac,am} | sflv{1,2,3}_{ac,am}.
 
     ``transport`` (repro.wire.Transport) compresses the cut-layer link of
@@ -16,7 +17,19 @@ def make_strategy(method: str, adapter, opt_factory, n_clients,
     ``privacy`` (repro.privacy.PrivacyConfig) turns on DP-SGD for any
     method, cut-layer noise for the SL/SFL family, and pairwise-mask
     secure aggregation for FL.
+
+    ``engine`` selects the execution path: ``"stepwise"`` (legacy, one
+    jitted dispatch per mini-batch — the parity reference) or
+    ``"compiled"`` (repro.core.strategies.engine: whole epochs as single
+    XLA programs, scan-over-batches / vmap-over-hospitals).  Both are
+    numerically equivalent to 1e-5 (tests/test_engine.py).
+    ``drop_remainder=False`` keeps the final short batch of each hospital
+    (pad-and-mask on the compiled path).  ``shard=True`` places the
+    hospital axis across local devices where possible (no-op on one
+    device).
     """
+    kw = dict(privacy=privacy, engine=engine,
+              drop_remainder=drop_remainder, shard=shard)
     if method in ("centralized", "fl"):
         if transport is not None:
             raise ValueError(f"{method} has no cut-layer link for a "
@@ -26,7 +39,7 @@ def make_strategy(method: str, adapter, opt_factory, n_clients,
         if privacy is not None and privacy.secagg and method != "fl":
             raise ValueError("secure aggregation needs federated uploads")
         return (Centralized if method == "centralized" else FedAvg)(
-            adapter, opt_factory, n_clients, privacy=privacy)
+            adapter, opt_factory, n_clients, **kw)
     if privacy is not None and privacy.secagg:
         raise ValueError("secure aggregation applies to FL model uploads; "
                          f"{method} ships activations, not updates")
@@ -34,7 +47,7 @@ def make_strategy(method: str, adapter, opt_factory, n_clients,
     cls = {"sl": SplitLearning, "sflv1": SplitFedV1,
            "sflv2": SplitFedV2, "sflv3": SplitFedV3}[kind]
     return cls(adapter, opt_factory, n_clients, schedule,
-               transport=transport, privacy=privacy)
+               transport=transport, **kw)
 
 
 METHODS = ["centralized", "fl", "sl_ac", "sl_am",

@@ -1,4 +1,4 @@
-"""Strategy API + shared jitted step builders.
+"""Strategy API + shared step builders.
 
 Every strategy consumes a ``SplitAdapter`` (architecture-agnostic) and an
 optimizer factory, and exposes:
@@ -10,6 +10,18 @@ optimizer factory, and exposes:
 ``client_data`` is a list (len n_clients) of dicts of numpy arrays.
 Evaluation follows the paper (§3.4): a sample from hospital i always passes
 through hospital i's own client segment(s); FL/centralized have one model.
+
+Two execution engines share the SAME pure step functions (``full_step_fn``
+/ ``split_step_fn`` / ``sflv3_step_fn``):
+
+  * ``stepwise`` (legacy, the parity reference): a Python host loop
+    dispatching one jitted step per mini-batch.
+  * ``compiled`` (repro.core.strategies.engine): whole epochs lowered to
+    single XLA programs — ``lax.scan`` over batches, ``vmap`` over the
+    hospital axis where semantics allow.
+
+Because both engines trace the identical step math, they agree to float32
+round-off (asserted at 1e-5 in tests/test_engine.py).
 """
 
 from __future__ import annotations
@@ -19,21 +31,36 @@ from functools import partial
 from typing import Callable
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.partition import SplitAdapter
+from repro.core.partition import SplitAdapter, stack_trees, unstack_tree
 from repro import optim as O
 
 
 @dataclasses.dataclass
 class EpochLog:
+    """Per-epoch training log.
+
+    ``weights`` are per-step valid-example counts (None == every step saw
+    a full batch); ``mean_loss`` is the example-weighted mean so a compiled
+    (pad-and-mask) epoch and a stepwise epoch over the same data report
+    identical statistics.  ``client_steps`` counts optimizer steps actually
+    attributed to each hospital (masked padding steps excluded).
+    """
     losses: list
     steps: int
+    weights: list | None = None
+    client_steps: list[int] | None = None
 
     @property
     def mean_loss(self):
-        return float(np.mean(self.losses)) if self.losses else float("nan")
+        if not self.losses:
+            return float("nan")
+        if self.weights is None:
+            return float(np.mean(self.losses))
+        w = np.asarray(self.weights, dtype=np.float64)
+        l = np.asarray(self.losses, dtype=np.float64)
+        return float((l * w).sum() / max(w.sum(), 1.0))
 
 
 def tree_mean(trees):
@@ -46,27 +73,49 @@ def tree_weighted_mean(trees, weights):
         lambda *xs: sum(w * x for w, x in zip(weights, xs)) / total, *trees)
 
 
-def np_batches(data: dict, batch_size: int, rng: np.random.Generator | None):
+def np_batches(data: dict, batch_size: int, rng: np.random.Generator | None,
+               drop_remainder: bool = True):
+    """Shuffle + slice a client's epoch into batch dicts.
+
+    ``drop_remainder=True`` reproduces the paper testbed (and this repo's
+    historical behaviour): the final ``n % batch_size`` samples are silently
+    dropped.  ``drop_remainder=False`` keeps them as one short final batch —
+    the stepwise counterpart of the compiled engine's pad-and-mask rows.
+    """
     n = len(next(iter(data.values())))
     idx = np.arange(n)
     if rng is not None:
         rng.shuffle(idx)
-    nb = n // batch_size
-    return [{k: v[idx[i * batch_size:(i + 1) * batch_size]]
-             for k, v in data.items()} for i in range(nb)]
+    stop = (n // batch_size) * batch_size if drop_remainder else n
+    return [{k: v[idx[s:s + batch_size]] for k, v in data.items()}
+            for s in range(0, stop, batch_size)]
 
 
 class Strategy:
     name: str = "base"
+    # every hospital scores with the same params (FL/centralized): the
+    # batched scorer keeps ONE param copy instead of an n_clients stack
+    shared_eval_params: bool = False
 
     def __init__(self, adapter: SplitAdapter, opt_factory: Callable[[], O.Optimizer],
-                 n_clients: int, privacy=None):
+                 n_clients: int, privacy=None, engine: str = "stepwise",
+                 drop_remainder: bool = True, shard: bool = False):
+        if engine not in ("stepwise", "compiled"):
+            raise ValueError(f"unknown engine {engine!r}")
         self.adapter = adapter
         self.opt_factory = opt_factory
         self.n_clients = n_clients
         self.privacy = privacy          # repro.privacy.PrivacyConfig | None
+        self.engine = engine
+        self.drop_remainder = drop_remainder
+        self.shard = shard              # place hospital axis across devices
         self._accountants = None
         self._key_step = 0
+        if engine == "compiled" and not drop_remainder and self._keyed:
+            raise ValueError(
+                "compiled engine with drop_remainder=False cannot reproduce "
+                "keyed (DP / cut-noise) draws on partial batches; use "
+                "drop_remainder=True")
 
     # -- to implement ---------------------------------------------------------
     def setup(self, key):
@@ -91,13 +140,28 @@ class Strategy:
         p = self.privacy
         return p is not None and (p.dp_enabled or p.cut_noise_std > 0)
 
-    def _next_key(self):
-        """Fresh per-step key derived from the privacy seed."""
+    def _privacy_base_key(self):
         if not hasattr(self, "_base_key"):
             seed = self.privacy.seed if self.privacy is not None else 0
             self._base_key = jax.random.key(seed)
+        return self._base_key
+
+    def _next_key(self):
+        """Fresh per-step key derived from the privacy seed."""
+        from repro.privacy.dpsgd import step_key
         self._key_step += 1
-        return jax.random.fold_in(self._base_key, self._key_step)
+        return step_key(self._privacy_base_key(), np.uint32(self._key_step))
+
+    def _take_key_indices(self, count: int) -> np.ndarray:
+        """Reserve ``count`` sequential step-key indices.
+
+        The compiled engine derives step keys INSIDE the scan as
+        ``fold_in(base_key, index)`` — reserving the same running counter the
+        stepwise path consumes keeps the two paths' noise draws identical.
+        """
+        start = self._key_step
+        self._key_step += count
+        return np.arange(start + 1, start + count + 1, dtype=np.uint32)
 
     def _dp_account(self, client_idx, n_samples, batch_size, count=1):
         """Record ``count`` DP mechanism applications on hospital
@@ -120,43 +184,86 @@ class Strategy:
         return [a.summary() for a in self._accountants]
 
     # -- common ---------------------------------------------------------------
-    def _scores_fn(self):
-        if not hasattr(self, "_scores_jit"):
-            self._scores_jit = jax.jit(self.adapter.full_scores)
-        return self._scores_jit
+    def _scores_all_fn(self):
+        """Jitted (vmap over hospitals) x (vmap over batches) scorer: ONE
+        dispatch evaluates every hospital's padded epoch."""
+        if not hasattr(self, "_scores_all_jit"):
+            fs = self.adapter.full_scores
+            in_p = None if self.shared_eval_params else 0
+            self._scores_all_jit = jax.jit(
+                jax.vmap(lambda p, d: jax.vmap(partial(fs, p))(d),
+                         in_axes=(in_p, 0)))
+        return self._scores_all_jit
+
+    def _stacked_eval_params(self, state):
+        if self.shared_eval_params:
+            return self.params_for_eval(state, 0)
+        return stack_trees([self.params_for_eval(state, i)
+                            for i in range(self.n_clients)])
+
+    def scores_all(self, state, datas: list, batch_size=60):
+        """Per-sample scores for every hospital in a single jitted dispatch.
+
+        Each hospital's split is padded (repeating the last row — the
+        existing partial-batch idiom) to a common ``nb * bs`` grid, stacked
+        along a leading hospital axis, and scored by the vmapped scorer;
+        padding rows are sliced off per hospital.
+        """
+        ns = [len(d["label"]) for d in datas]
+        n_max = max(ns, default=0)
+        if n_max == 0:
+            return [np.zeros((0,)) for _ in datas]
+        bs = min(batch_size, n_max)
+        nb = -(-n_max // bs)
+        L = nb * bs
+
+        def pad(v):
+            if len(v) == 0:                      # empty hospital: all padding
+                return np.zeros((L, *v.shape[1:]), v.dtype)
+            if len(v) == L:
+                return v
+            return np.concatenate([v, np.repeat(v[-1:], L - len(v), axis=0)])
+
+        stacked = {k: np.stack([pad(d[k]) for d in datas])
+                   for k in datas[0]}
+        stacked = {k: v.reshape(len(datas), nb, bs, *v.shape[2:])
+                   for k, v in stacked.items()}
+        params = self._stacked_eval_params(state)
+        out = np.asarray(self._scores_all_fn()(params, stacked))
+        out = out.reshape(out.shape[0], L, *out.shape[3:])
+        return [out[i, :ns[i]] for i in range(len(datas))]
 
     def scores(self, state, client_idx, data, batch_size=60):
-        """Per-sample scores for EVERY sample: the final partial batch is
-        padded (by repeating the last row) to the jitted batch shape and the
-        padding sliced off, so small hospitals never lose eval samples."""
-        params = self.params_for_eval(state, client_idx)
-        fn = self._scores_fn()
+        """Per-sample scores for EVERY sample of one hospital (the final
+        partial batch is padded and sliced, so small hospitals never lose
+        eval samples).  Routed through the same vmapped scorer as
+        ``scores_all`` with a singleton hospital axis."""
         n = len(data["label"])
         if n == 0:
             return np.zeros((0,))
+        params = self.params_for_eval(state, client_idx)
+        if not self.shared_eval_params:
+            params = stack_trees([params])
         bs = min(batch_size, n)
-        outs = []
-        for start in range(0, n, bs):
-            b = {k: v[start:start + bs] for k, v in data.items()}
-            m = len(b["label"])
-            if m < bs:                     # pad-and-mask the remainder batch
-                b = {k: np.concatenate(
-                    [v, np.repeat(v[-1:], bs - m, axis=0)]) for k, v in
-                    b.items()}
-            outs.append(np.asarray(fn(params, b))[:m])
-        return np.concatenate(outs) if outs else np.zeros((0,))
+        nb = -(-n // bs)
+        L = nb * bs
+        stacked = {}
+        for k, v in data.items():
+            if len(v) != L:
+                v = np.concatenate([v, np.repeat(v[-1:], L - len(v), axis=0)])
+            stacked[k] = v.reshape(1, nb, bs, *v.shape[1:])
+        out = np.asarray(self._scores_all_fn()(params, stacked))
+        return out.reshape(L, *out.shape[3:])[:n]
 
     def evaluate(self, state, clients, split="test", batch_size=60):
-        """Pooled metrics across clients, each scored by its own front."""
+        """Pooled metrics across clients, each scored by its own front —
+        all hospitals evaluated in one dispatch via ``scores_all``."""
         from repro.train import metrics as MET
-        all_scores, all_labels = [], []
-        for i, c in enumerate(clients):
-            data = getattr(c, split)
-            s = self.scores(state, i, data, batch_size)
-            all_scores.append(s)
-            all_labels.append(data["label"][:len(s)])
+        datas = [getattr(c, split) for c in clients]
+        scores = self.scores_all(state, datas, batch_size)
+        all_labels = [d["label"][:len(s)] for d, s in zip(datas, scores)]
         return MET.all_metrics(np.concatenate(all_labels),
-                               np.concatenate(all_scores))
+                               np.concatenate(scores))
 
     def val_loss(self, state, clients, batch_size=60):
         if not hasattr(self, "_val_loss_jit"):
@@ -173,47 +280,50 @@ class Strategy:
 
 
 # ---------------------------------------------------------------------------
-# jitted step builders
+# pure step functions — shared verbatim by the stepwise jit wrappers below
+# and the compiled engine's scan bodies (repro.core.strategies.engine)
 # ---------------------------------------------------------------------------
 
-def make_full_step(adapter: SplitAdapter, opt: O.Optimizer, privacy=None):
-    """Plain step over ALL segments jointly (centralized / FL local).
+def full_step_fn(adapter: SplitAdapter, opt: O.Optimizer, privacy=None):
+    """Pure step over ALL segments jointly (centralized / FL local).
 
-    With a DP-enabled ``privacy`` config the returned step takes a fourth
-    ``key`` argument and uses the DP-SGD estimator (per-example clip via the
-    fused Pallas kernel + Gaussian noise) in place of the batch gradient.
+    Returns ``(step, keyed)`` with
+    ``step(params, opt_state, batch, key=None, weights=None)``; ``key`` is
+    consumed only when ``keyed`` (DP-SGD), ``weights`` are per-example
+    pad-mask weights (None == plain batch mean; unsupported under DP).
     """
     if privacy is not None and privacy.dp_enabled:
         from repro.privacy.dpsgd import dp_value_and_grad, keyed
         vg = dp_value_and_grad(keyed(adapter.full_loss), privacy)
 
-        @jax.jit
-        def dp_step(params, opt_state, batch, key):
+        def dp_step(params, opt_state, batch, key=None, weights=None):
             loss, grads = vg(params, batch, key)
             updates, opt_state = opt.update(grads, opt_state, params)
             return O.apply_updates(params, updates), opt_state, loss
-        return dp_step
+        return dp_step, True
 
-    @jax.jit
-    def step(params, opt_state, batch):
-        loss, grads = jax.value_and_grad(adapter.full_loss)(params, batch)
+    def step(params, opt_state, batch, key=None, weights=None):
+        loss, grads = jax.value_and_grad(
+            lambda p: adapter.full_loss(p, batch, weights=weights))(params)
         updates, opt_state = opt.update(grads, opt_state, params)
         return O.apply_updates(params, updates), opt_state, loss
-    return step
+    return step, False
 
 
-def make_split_step(adapter: SplitAdapter, opt_client: O.Optimizer,
-                    opt_server: O.Optimizer, transport=None, privacy=None):
-    """One SL/SFLv2 step: joint grad through client_i(+tail_i) and server.
+def split_step_fn(adapter: SplitAdapter, opt_client: O.Optimizer,
+                  opt_server: O.Optimizer, transport=None, privacy=None):
+    """Pure SL/SFLv2 step: joint grad through client_i(+tail_i) and server.
 
     Numerically identical to the paper's two-hop backprop; the hop itself is
     the activation/gradient transfer accounted in repro.core.comm.  With a
     ``transport`` (repro.wire), the cut-layer activations are roundtripped
     through its codec in-graph — the server trains on what crossed the wire.
 
-    A privacy config adds a sixth ``key`` argument: DP-SGD clips/noises the
-    JOINT (client, server) per-example gradient, and/or Gaussian cut-layer
-    noise rides on the boundary after the codec.
+    Returns ``(step, keyed)`` with ``step(client_params, server_params,
+    c_opt, s_opt, batch, key=None, weights=None)``.  A privacy config makes
+    the step keyed: DP-SGD clips/noises the JOINT (client, server)
+    per-example gradient, and/or Gaussian cut-layer noise rides on the
+    boundary after the codec.
     """
     nls = adapter.nls
     base_boundary = transport.boundary if transport is not None else None
@@ -223,33 +333,35 @@ def make_split_step(adapter: SplitAdapter, opt_client: O.Optimizer,
     if priv is not None:
         from repro.privacy.dpsgd import boundary_with_key, dp_value_and_grad
 
-        def loss_fn(both, b, k):
-            params = {"front": both["c"]["front"], "middle": both["s"]}
-            if nls:
-                params["tail"] = both["c"]["tail"]
-            return adapter.full_loss(
-                params, b, boundary=boundary_with_key(base_boundary, priv, k))
+        def dp_step(client_params, server_params, c_opt, s_opt, batch,
+                    key=None, weights=None):
+            def loss_fn(both, b, k):
+                params = {"front": both["c"]["front"], "middle": both["s"]}
+                if nls:
+                    params["tail"] = both["c"]["tail"]
+                return adapter.full_loss(
+                    params, b,
+                    boundary=boundary_with_key(base_boundary, priv, k),
+                    weights=weights)
 
-        vg = (dp_value_and_grad(loss_fn, priv) if priv.dp_enabled
-              else jax.value_and_grad(loss_fn))
-
-        @jax.jit
-        def dp_step(client_params, server_params, c_opt, s_opt, batch, key):
+            vg = (dp_value_and_grad(loss_fn, priv) if priv.dp_enabled
+                  else jax.value_and_grad(loss_fn))
             loss, g = vg({"c": client_params, "s": server_params}, batch,
                          key)
             cu, c_opt = opt_client.update(g["c"], c_opt, client_params)
             su, s_opt = opt_server.update(g["s"], s_opt, server_params)
             return (O.apply_updates(client_params, cu),
                     O.apply_updates(server_params, su), c_opt, s_opt, loss)
-        return dp_step
+        return dp_step, True
 
-    @jax.jit
-    def step(client_params, server_params, c_opt, s_opt, batch):
+    def step(client_params, server_params, c_opt, s_opt, batch, key=None,
+             weights=None):
         def loss_fn(cp, sp):
             params = {"front": cp["front"], "middle": sp}
             if nls:
                 params["tail"] = cp["tail"]
-            return adapter.full_loss(params, batch, boundary=base_boundary)
+            return adapter.full_loss(params, batch, boundary=base_boundary,
+                                     weights=weights)
 
         loss, (gc, gs) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
             client_params, server_params)
@@ -257,20 +369,22 @@ def make_split_step(adapter: SplitAdapter, opt_client: O.Optimizer,
         su, s_opt = opt_server.update(gs, s_opt, server_params)
         return (O.apply_updates(client_params, cu),
                 O.apply_updates(server_params, su), c_opt, s_opt, loss)
-    return step
+    return step, False
 
 
-def make_sflv3_step(adapter: SplitAdapter, opt_client: O.Optimizer,
-                    opt_server: O.Optimizer, n_clients: int, transport=None,
-                    privacy=None):
-    """SplitFedv3 step (paper Algorithm 1, batch-synchronous form):
+def sflv3_step_fn(adapter: SplitAdapter, opt_client: O.Optimizer,
+                  opt_server: O.Optimizer, n_clients: int, transport=None,
+                  privacy=None):
+    """Pure SplitFedv3 step (paper Algorithm 1, batch-synchronous form):
     clients run in parallel (vmap over the stacked client axis); the server
     segment is updated once with the weighted average of per-client server
     gradients; client segments update individually (never averaged).
 
-    A privacy config adds a sixth ``key`` argument: every client clips and
-    noises its OWN per-example gradients (keys split per client) before the
-    server averages, so each hospital's DP guarantee stands on its own.
+    Returns ``(step, keyed)`` with ``step(stacked_clients, server_params,
+    c_opt, s_opt, stacked_batch, key=None)``.  A privacy config makes the
+    step keyed: every client clips and noises its OWN per-example gradients
+    (keys split per client) before the server averages, so each hospital's
+    DP guarantee stands on its own.
     """
     nls = adapter.nls
     boundary = transport.boundary if transport is not None else None
@@ -280,20 +394,19 @@ def make_sflv3_step(adapter: SplitAdapter, opt_client: O.Optimizer,
     if priv is not None:
         from repro.privacy.dpsgd import boundary_with_key, dp_value_and_grad
 
-        def loss_fn(both, b, k):
-            params = {"front": both["c"]["front"], "middle": both["s"]}
-            if nls:
-                params["tail"] = both["c"]["tail"]
-            return adapter.full_loss(
-                params, b, boundary=boundary_with_key(boundary, priv, k))
-
-        vg = (dp_value_and_grad(loss_fn, priv) if priv.dp_enabled
-              else jax.value_and_grad(loss_fn))
-
-        @jax.jit
         def dp_step(stacked_clients, server_params, c_opt, s_opt,
-                    stacked_batch, key):
+                    stacked_batch, key=None):
             keys = jax.random.split(key, n_clients)
+
+            def loss_fn(both, b, k):
+                params = {"front": both["c"]["front"], "middle": both["s"]}
+                if nls:
+                    params["tail"] = both["c"]["tail"]
+                return adapter.full_loss(
+                    params, b, boundary=boundary_with_key(boundary, priv, k))
+
+            vg = (dp_value_and_grad(loss_fn, priv) if priv.dp_enabled
+                  else jax.value_and_grad(loss_fn))
 
             def one(cp, b, k):
                 return vg({"c": cp, "s": server_params}, b, k)
@@ -306,10 +419,10 @@ def make_sflv3_step(adapter: SplitAdapter, opt_client: O.Optimizer,
             return (O.apply_updates(stacked_clients, cu),
                     O.apply_updates(server_params, su), c_opt, s_opt,
                     losses)
-        return dp_step
+        return dp_step, True
 
-    @jax.jit
-    def step(stacked_clients, server_params, c_opt, s_opt, stacked_batch):
+    def step(stacked_clients, server_params, c_opt, s_opt, stacked_batch,
+             key=None):
         def client_loss(cp, sp, batch):
             params = {"front": cp["front"], "middle": sp}
             if nls:
@@ -330,12 +443,48 @@ def make_sflv3_step(adapter: SplitAdapter, opt_client: O.Optimizer,
         su, s_opt = opt_server.update(gs, s_opt, server_params)
         return (O.apply_updates(stacked_clients, cu),
                 O.apply_updates(server_params, su), c_opt, s_opt, losses)
-    return step
+    return step, False
 
 
-def stack_trees(trees):
-    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+# ---------------------------------------------------------------------------
+# jitted step builders — the stepwise engine's per-batch dispatch wrappers
+# ---------------------------------------------------------------------------
+
+def make_full_step(adapter: SplitAdapter, opt: O.Optimizer, privacy=None):
+    """Jitted plain step (centralized / FL local); see ``full_step_fn``.
+    With DP the returned step takes a fourth ``key`` argument."""
+    step, keyed_ = full_step_fn(adapter, opt, privacy)
+    if keyed_:
+        return jax.jit(lambda p, s, b, k: step(p, s, b, k))
+    return jax.jit(lambda p, s, b: step(p, s, b))
 
 
-def unstack_tree(tree, n):
-    return [jax.tree.map(lambda x: x[i], tree) for i in range(n)]
+def make_split_step(adapter: SplitAdapter, opt_client: O.Optimizer,
+                    opt_server: O.Optimizer, transport=None, privacy=None):
+    """Jitted SL/SFLv2 step; see ``split_step_fn``.  A privacy config adds
+    a sixth ``key`` argument."""
+    step, keyed_ = split_step_fn(adapter, opt_client, opt_server, transport,
+                                 privacy)
+    if keyed_:
+        return jax.jit(lambda cp, sp, co, so, b, k: step(cp, sp, co, so, b,
+                                                         k))
+    return jax.jit(lambda cp, sp, co, so, b: step(cp, sp, co, so, b))
+
+
+def make_sflv3_step(adapter: SplitAdapter, opt_client: O.Optimizer,
+                    opt_server: O.Optimizer, n_clients: int, transport=None,
+                    privacy=None):
+    """Jitted SplitFedv3 step; see ``sflv3_step_fn``.  A privacy config
+    adds a sixth ``key`` argument."""
+    step, keyed_ = sflv3_step_fn(adapter, opt_client, opt_server, n_clients,
+                                 transport, privacy)
+    if keyed_:
+        return jax.jit(lambda sc, sp, co, so, b, k: step(sc, sp, co, so, b,
+                                                         k))
+    return jax.jit(lambda sc, sp, co, so, b: step(sc, sp, co, so, b))
+
+
+__all__ = ["Strategy", "EpochLog", "np_batches", "tree_mean",
+           "tree_weighted_mean", "stack_trees", "unstack_tree",
+           "full_step_fn", "split_step_fn", "sflv3_step_fn",
+           "make_full_step", "make_split_step", "make_sflv3_step"]

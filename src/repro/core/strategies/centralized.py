@@ -10,6 +10,7 @@ from repro.core.strategies.base import (Strategy, EpochLog, make_full_step,
 
 class Centralized(Strategy):
     name = "centralized"
+    shared_eval_params = True
 
     def setup(self, key):
         params = self.adapter.init(key)
@@ -22,9 +23,12 @@ class Centralized(Strategy):
     def run_epoch(self, state, client_data, rng, batch_size):
         pooled = {k: np.concatenate([d[k] for d in client_data])
                   for k in client_data[0]}
+        if self.engine == "compiled":
+            return self._run_epoch_compiled(state, pooled, rng, batch_size)
         n_pooled = len(pooled["label"])
-        losses = []
-        for batch in np_batches(pooled, batch_size, rng):
+        losses, weights = [], []
+        for batch in np_batches(pooled, batch_size, rng,
+                                self.drop_remainder):
             if self._keyed:
                 state["params"], state["opt"], loss = self._step(
                     state["params"], state["opt"], batch, self._next_key())
@@ -32,11 +36,35 @@ class Centralized(Strategy):
                 state["params"], state["opt"], loss = self._step(
                     state["params"], state["opt"], batch)
             losses.append(float(loss))
+            weights.append(len(batch["label"]))
             # centralized DP: every hospital's records sit in the pooled
             # set, so each carries the same pooled-rate guarantee
             for ci in range(self.n_clients):
                 self._dp_account(ci, n_pooled, batch_size)
-        return state, EpochLog(losses, len(losses))
+        return state, EpochLog(losses, len(losses), weights=weights)
+
+    def _run_epoch_compiled(self, state, pooled, rng, batch_size):
+        from repro.core.strategies import engine as ENG
+        packed = ENG.pack_epoch([pooled], batch_size, rng,
+                                self.drop_remainder)
+        nb = packed.n_batches[0]
+        if nb == 0:
+            return state, EpochLog([], 0)
+        if not hasattr(self, "_epoch_c"):
+            self._epoch_c = ENG.make_seq_epoch(self.adapter, self._opt,
+                                               self.privacy)
+        key_idx = np.zeros((packed.nb_max,), np.uint32)
+        if self._keyed:
+            key_idx[:nb] = self._take_key_indices(nb)
+        batches = {k: v[0] for k, v in packed.batches.items()}
+        ex_w = None if packed.ex_weights is None else packed.ex_weights[0]
+        state["params"], state["opt"], losses = self._epoch_c(
+            state["params"], state["opt"], batches, packed.mask[0], ex_w,
+            key_idx, self._privacy_base_key())
+        flat = [float(x) for x in np.asarray(losses)[:nb]]
+        for ci in range(self.n_clients):
+            self._dp_account(ci, packed.n_samples[0], batch_size, count=nb)
+        return state, EpochLog(flat, nb, weights=packed.step_examples[0])
 
     def params_for_eval(self, state, client_idx):
         return state["params"]

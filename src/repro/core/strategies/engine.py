@@ -1,0 +1,335 @@
+"""Compiled multi-hospital execution engine.
+
+The stepwise engine (the legacy path in each strategy, kept as the parity
+reference) dispatches one jitted step per mini-batch per hospital from a
+Python host loop — wall-clock is dominated by dispatch overhead and
+hospitals run strictly sequentially.  This module lowers a WHOLE epoch into
+a single XLA program instead:
+
+  * **pad-and-mask layout** — each hospital's shuffled epoch is packed into
+    rectangular ``[n_clients, n_batches, batch, ...]`` arrays plus a
+    ``[n_clients, n_batches]`` validity mask; uneven hospital sizes become
+    masked (no-op) scan steps and, with ``drop_remainder=False``, the final
+    short batch becomes per-example weights instead of a ragged shape.
+  * **scan over batches, vmap over hospitals** where semantics allow it:
+    FL local epochs are independent per hospital, so the per-client
+    ``lax.scan`` is wrapped in a ``vmap`` over the stacked hospital axis.
+  * **scanned interleave** where they don't: the SL/SFLv2 server segment
+    (and its Adam state) is shared and updated sequentially in schedule
+    order, so the epoch is ONE ``lax.scan`` over the dense
+    ``[step] -> (client, batch)`` schedule array from
+    ``repro.core.schedule.schedule_array`` — exact sequential Adam
+    semantics, zero host dispatches.
+  * **per-step PRNG keys by fold-in on the scan index**: the stepwise path
+    draws key ``fold_in(base, t)`` for the t-th step of the run; the packer
+    reserves the same running counter (``Strategy._take_key_indices``) and
+    the scan body folds the reserved index in, so DP-SGD / cut-layer noise
+    draws are bit-identical across engines.
+
+Every scan body calls the SAME pure step functions
+(``repro.core.strategies.base.{full,split,sflv3}_step_fn``) the stepwise
+jit wrappers use, which is what makes the two engines numerically
+equivalent (asserted at 1e-5 in tests/test_engine.py).
+
+``maybe_shard`` optionally places the hospital axis across local devices
+(``jax.sharding``); on a single device it is a no-op, so the engine runs
+unchanged on one CPU and scales to a multi-device host.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.partition import (SplitAdapter, tree_put, tree_select,
+                                  tree_take)
+from repro.core.strategies.base import (full_step_fn, sflv3_step_fn,
+                                        split_step_fn)
+from repro import optim as O
+
+
+# ---------------------------------------------------------------------------
+# pad-and-mask epoch packing
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PackedEpoch:
+    """One epoch of every hospital's data in rectangular form.
+
+    ``batches[k]`` has shape ``[n_clients, nb_max, batch, ...]``; rows past
+    a hospital's real data are zero padding flagged invalid by ``mask``.
+    ``ex_weights`` (only with ``drop_remainder=False``) carries per-example
+    validity for the final short batch of each hospital.
+    """
+    batches: dict
+    mask: np.ndarray                       # [C, NB] bool
+    ex_weights: np.ndarray | None          # [C, NB, B] float32
+    n_batches: list
+    step_examples: list                    # per client: valid-example counts
+    n_samples: list
+    batch_size: int
+
+    @property
+    def nb_max(self) -> int:
+        return self.mask.shape[1]
+
+    @property
+    def total_steps(self) -> int:
+        return int(sum(self.n_batches))
+
+
+def pack_epoch(client_data: list, batch_size: int,
+               rng: np.random.Generator | None,
+               drop_remainder: bool = True) -> PackedEpoch:
+    """Shuffle + pack every hospital's epoch (mirrors ``np_batches``).
+
+    The per-client shuffles consume ``rng`` in hospital order — exactly the
+    draws the stepwise path makes — so both engines train on identical
+    batch compositions.
+    """
+    n_batches, n_samples, step_examples, order = [], [], [], []
+    for d in client_data:
+        n = len(next(iter(d.values())))
+        idx = np.arange(n)
+        if rng is not None:
+            rng.shuffle(idx)
+        nb_full, rem = divmod(n, batch_size)
+        nb = nb_full + (1 if rem and not drop_remainder else 0)
+        order.append(idx)
+        n_batches.append(nb)
+        n_samples.append(n)
+        step_examples.append([batch_size] * nb_full
+                             + ([rem] if nb > nb_full else []))
+    C, NB = len(client_data), max(n_batches, default=0)
+
+    batches = {}
+    for k in client_data[0]:
+        proto = client_data[0][k]
+        out = np.zeros((C, NB * batch_size, *proto.shape[1:]), proto.dtype)
+        for c, d in enumerate(client_data):
+            used = (n_batches[c] * batch_size if drop_remainder
+                    else n_samples[c])
+            out[c, :used] = d[k][order[c][:used]]
+        batches[k] = out.reshape(C, NB, batch_size, *proto.shape[1:])
+
+    mask = np.zeros((C, NB), bool)
+    ex_w = (None if drop_remainder
+            else np.zeros((C, NB, batch_size), np.float32))
+    for c in range(C):
+        mask[c, :n_batches[c]] = True
+        if ex_w is not None:
+            for j, m in enumerate(step_examples[c]):
+                ex_w[c, j, :m] = 1.0
+    return PackedEpoch(batches, mask, ex_w, n_batches, step_examples,
+                       n_samples, batch_size)
+
+
+# ---------------------------------------------------------------------------
+# optional hospital-axis sharding
+# ---------------------------------------------------------------------------
+
+def maybe_shard(tree, n_clients: int, enabled: bool = True):
+    """Place every ``[n_clients, ...]`` leaf across the local devices along
+    the hospital axis.  Single device (or a hospital count that does not
+    divide the device count): no-op — the engine's single-device fallback."""
+    devs = jax.devices()
+    if not enabled or len(devs) < 2 or n_clients % len(devs) != 0:
+        return tree
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec
+    mesh = Mesh(np.asarray(devs), ("hosp",))
+    spec = NamedSharding(mesh, PartitionSpec("hosp"))
+
+    def put(x):
+        if getattr(x, "ndim", 0) >= 1 and x.shape[0] == n_clients:
+            return jax.device_put(x, spec)
+        return x
+
+    return jax.tree.map(put, tree)
+
+
+# ---------------------------------------------------------------------------
+# compiled epoch kernels
+# ---------------------------------------------------------------------------
+
+def _step_key(base_key, idx, keyed):
+    if not keyed:
+        return None
+    from repro.privacy.dpsgd import step_key
+    return step_key(base_key, idx)
+
+
+def make_fl_epoch(adapter: SplitAdapter, opt: O.Optimizer, privacy=None):
+    """FL round as vmap-over-hospitals of scan-over-batches.
+
+    Every hospital starts from the broadcast global params with a fresh
+    optimizer (FedAvg semantics); masked steps are no-ops via
+    ``tree_select`` so the Adam step counter never advances on padding.
+    Returns ``epoch(global_params, batches, mask, ex_w, key_idx, base_key)
+    -> (stacked local params, [C, NB] losses)``.
+    """
+    step, keyed = full_step_fn(adapter, opt, privacy)
+
+    def epoch(global_params, batches, mask, ex_w, key_idx, base_key):
+        def per_client(b_c, m_c, w_c, ki_c):
+            def body(carry, xs):
+                p, s = carry
+                batch, m, w, ki = xs
+                p2, s2, loss = step(p, s, batch,
+                                    _step_key(base_key, ki, keyed), w)
+                return (tree_select(m, p2, p), tree_select(m, s2, s)), loss
+
+            (p, _), losses = jax.lax.scan(
+                body, (global_params, opt.init(global_params)),
+                (b_c, m_c, w_c, ki_c))
+            return p, losses
+
+        return jax.vmap(per_client)(batches, mask, ex_w, key_idx)
+
+    return jax.jit(epoch)
+
+
+def make_seq_epoch(adapter: SplitAdapter, opt: O.Optimizer, privacy=None):
+    """Centralized epoch as a single scan-over-batches (one 'hospital',
+    persistent optimizer state).  Returns ``epoch(params, opt_state,
+    batches, mask, ex_w, key_idx, base_key) -> (params, opt_state,
+    [NB] losses)``."""
+    step, keyed = full_step_fn(adapter, opt, privacy)
+
+    def epoch(params, opt_state, batches, mask, ex_w, key_idx, base_key):
+        def body(carry, xs):
+            p, s = carry
+            batch, m, w, ki = xs
+            p2, s2, loss = step(p, s, batch, _step_key(base_key, ki, keyed),
+                                w)
+            return (tree_select(m, p2, p), tree_select(m, s2, s)), loss
+
+        (params, opt_state), losses = jax.lax.scan(
+            body, (params, opt_state), (batches, mask, ex_w, key_idx))
+        return params, opt_state, losses
+
+    return jax.jit(epoch)
+
+
+def make_interleaved_epoch(adapter: SplitAdapter, opt_client: O.Optimizer,
+                           opt_server: O.Optimizer, transport=None,
+                           privacy=None):
+    """SL/SFLv2 epoch as ONE scan over the dense schedule array.
+
+    The shared server segment forces sequential semantics: each scan step
+    gathers client ``c``'s segment + optimizer slice from the stacked
+    hospital axis, runs the exact split step, and scatters the update back.
+    Returns ``epoch(stacked_clients, server, stacked_c_opts, s_opt,
+    batches, ex_w, sched, key_idx, base_key) -> (stacked_clients, server,
+    stacked_c_opts, s_opt, [steps] losses)``.
+    """
+    step, keyed = split_step_fn(adapter, opt_client, opt_server, transport,
+                                privacy)
+
+    def epoch(stacked_clients, server, stacked_c_opts, s_opt, batches,
+              ex_w, sched, key_idx, base_key):
+        def body(carry, xs):
+            sc, sp, co, so = carry
+            cb, ki = xs
+            c, b = cb[0], cb[1]
+            batch = jax.tree.map(lambda x: x[c, b], batches)
+            w = None if ex_w is None else ex_w[c, b]
+            cp, sp, cop, so, loss = step(
+                tree_take(sc, c), sp, tree_take(co, c), so, batch,
+                _step_key(base_key, ki, keyed), w)
+            return (tree_put(sc, c, cp), sp, tree_put(co, c, cop), so), loss
+
+        carry, losses = jax.lax.scan(
+            body, (stacked_clients, server, stacked_c_opts, s_opt),
+            (sched, key_idx))
+        return (*carry, losses)
+
+    return jax.jit(epoch)
+
+
+def make_sflv3_epoch(adapter: SplitAdapter, opt_client: O.Optimizer,
+                     opt_server: O.Optimizer, n_clients: int, transport=None,
+                     privacy=None):
+    """SplitFedv3 epoch: scan over synchronous steps, vmap over hospitals
+    inside each step (the step fn already vmaps), with the wrap-around
+    batch index precomputed as a dense ``[steps, n_clients]`` array.
+    Returns ``epoch(stacked_clients, server, c_opt, s_opt, batches, b_idx,
+    key_idx, base_key) -> (..., [steps, C] losses)``."""
+    step, keyed = sflv3_step_fn(adapter, opt_client, opt_server, n_clients,
+                                transport, privacy)
+
+    def epoch(stacked_clients, server, c_opt, s_opt, batches, b_idx,
+              key_idx, base_key):
+        def body(carry, xs):
+            sc, sp, co, so = carry
+            bi, ki = xs
+            batch = jax.tree.map(
+                lambda x: x[jnp.arange(n_clients), bi], batches)
+            sc, sp, co, so, losses = step(
+                sc, sp, co, so, batch, _step_key(base_key, ki, keyed))
+            return (sc, sp, co, so), losses
+
+        carry, losses = jax.lax.scan(
+            body, (stacked_clients, server, c_opt, s_opt), (b_idx, key_idx))
+        return (*carry, losses)
+
+    return jax.jit(epoch)
+
+
+@jax.jit
+def stacked_weighted_mean(stacked, weights):
+    """Data-size-weighted FedAvg over the leading hospital axis — ONE
+    fused program instead of per-leaf eager host ops over a list of
+    trees (host-side aggregation cost grows with n_clients x n_leaves
+    and was dwarfing the compiled epoch itself)."""
+    w = weights.astype(jnp.float32) / weights.astype(jnp.float32).sum()
+
+    def leaf(x):
+        wx = w.reshape((-1,) + (1,) * (x.ndim - 1))
+        return (x.astype(jnp.float32) * wx).sum(axis=0).astype(x.dtype)
+
+    return jax.tree.map(leaf, stacked)
+
+
+@jax.jit
+def stacked_mean_sync(stacked):
+    """SFLv2-style client synchronization on the stacked hospital axis:
+    every hospital gets the mean of all client segments."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x.mean(axis=0, keepdims=True), x.shape),
+        stacked)
+
+
+# ---------------------------------------------------------------------------
+# host-side helpers shared by the strategies' compiled run_epoch paths
+# ---------------------------------------------------------------------------
+
+def client_major_log(losses, packed: PackedEpoch):
+    """Flatten a ``[C, NB]`` loss array in client-major valid order —
+    exactly the stepwise FL/centralized loss ordering."""
+    arr = np.asarray(losses)
+    flat, weights = [], []
+    for c, nb in enumerate(packed.n_batches):
+        flat.extend(float(x) for x in arr[c, :nb])
+        weights.extend(packed.step_examples[c])
+    return flat, weights
+
+
+def scheduled_log(losses, sched: np.ndarray, packed: PackedEpoch):
+    """Per-step losses already in schedule order; weights follow the
+    schedule's (client, batch) rows."""
+    arr = np.asarray(losses)
+    flat = [float(x) for x in arr]
+    weights = [packed.step_examples[int(c)][int(b)] for c, b in sched]
+    return flat, weights
+
+
+def key_index_grid(strategy, packed: PackedEpoch) -> np.ndarray:
+    """[C, NB] per-step key indices in client-major stepwise order (FL)."""
+    grid = np.zeros((len(packed.n_batches), packed.nb_max), np.uint32)
+    if strategy._keyed:
+        for c, nb in enumerate(packed.n_batches):
+            grid[c, :nb] = strategy._take_key_indices(nb)
+    return grid

@@ -11,6 +11,10 @@ each hospital's accountant composes over its own rounds; with
 aggregation (``repro.privacy.secagg``) — the server only ever adds
 uniformly-masked fixed-point uploads, and the handshake + masked-upload
 bytes are metered.
+
+Local epochs are independent across hospitals, so the compiled engine runs
+the whole round as ONE program: ``vmap`` over the hospital axis of a
+``lax.scan`` over each hospital's padded batch grid.
 """
 
 from __future__ import annotations
@@ -19,12 +23,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.partition import unstack_tree
 from repro.core.strategies.base import (Strategy, EpochLog, make_full_step,
                                         np_batches, tree_weighted_mean)
 
 
 class FedAvg(Strategy):
     name = "fl"
+    shared_eval_params = True
 
     def setup(self, key):
         params = self.adapter.init(key)
@@ -47,23 +53,65 @@ class FedAvg(Strategy):
         return tree_weighted_mean(locals_, weights)
 
     def run_epoch(self, state, client_data, rng, batch_size):
+        if self.engine == "compiled":
+            return self._run_epoch_compiled(state, client_data, rng,
+                                            batch_size)
         locals_, weights, losses = [], [], []
+        loss_w, client_steps = [], []
         for ci, data in enumerate(client_data):
             p = state["params"]                    # start from global
             opt_state = self._opt.init(p)          # fresh optimizer per round
             n = len(data["label"])
-            for batch in np_batches(data, batch_size, rng):
+            steps = 0
+            for batch in np_batches(data, batch_size, rng,
+                                    self.drop_remainder):
                 if self._keyed:
                     p, opt_state, loss = self._step(p, opt_state, batch,
                                                     self._next_key())
                 else:
                     p, opt_state, loss = self._step(p, opt_state, batch)
                 losses.append(float(loss))
+                loss_w.append(len(batch["label"]))
+                steps += 1
                 self._dp_account(ci, n, batch_size)
             locals_.append(p)
             weights.append(n)
+            client_steps.append(steps)
         state["params"] = self._aggregate(locals_, weights)
-        return state, EpochLog(losses, len(losses))
+        return state, EpochLog(losses, len(losses), weights=loss_w,
+                               client_steps=client_steps)
+
+    def _run_epoch_compiled(self, state, client_data, rng, batch_size):
+        from repro.core.strategies import engine as ENG
+        packed = ENG.pack_epoch(client_data, batch_size, rng,
+                                self.drop_remainder)
+        if packed.nb_max == 0:
+            return state, EpochLog([], 0,
+                                   client_steps=[0] * self.n_clients)
+        if not hasattr(self, "_epoch_c"):
+            self._epoch_c = ENG.make_fl_epoch(self.adapter, self._opt,
+                                              self.privacy)
+        key_idx = ENG.key_index_grid(self, packed)
+        batches = ENG.maybe_shard(packed.batches, self.n_clients,
+                                  self.shard)
+        locals_stacked, losses = self._epoch_c(
+            state["params"], batches, packed.mask, packed.ex_weights,
+            key_idx, self._privacy_base_key())
+        if self.privacy is not None and self.privacy.secagg:
+            # secagg masks per-client host uploads: unstack and reuse the
+            # exact stepwise aggregation path
+            locals_ = unstack_tree(locals_stacked, self.n_clients)
+            state["params"] = self._aggregate(locals_, packed.n_samples)
+        else:
+            state["params"] = ENG.stacked_weighted_mean(
+                locals_stacked, np.asarray(packed.n_samples, np.float32))
+        flat, loss_w = ENG.client_major_log(losses, packed)
+        for ci, nb in enumerate(packed.n_batches):
+            if nb:
+                self._dp_account(ci, packed.n_samples[ci], batch_size,
+                                 count=nb)
+        return state, EpochLog(flat, len(flat), weights=loss_w,
+                               client_steps=list(packed.n_batches))
 
     def params_for_eval(self, state, client_idx):
         return state["params"]

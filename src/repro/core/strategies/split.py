@@ -5,13 +5,18 @@
 
 Client segments are unique per client and never synchronized (paper: "We do
 not use any form of weight synchronization").  The server segment (and its
-Adam state) is shared and updated sequentially in schedule order.
+Adam state) is shared and updated sequentially in schedule order — which is
+why the compiled engine runs SL as a single scanned interleave over the
+dense schedule array (``repro.core.schedule.schedule_array``) rather than a
+vmap over hospitals: vmapping would break the exact sequential Adam
+semantics of the shared server segment.
 """
 
 from __future__ import annotations
 
+import numpy as np
 
-from repro.core.schedule import SCHEDULES
+from repro.core.schedule import SCHEDULES, schedule_array
 from repro.core.strategies.base import (Strategy, EpochLog, make_split_step,
                                         np_batches)
 
@@ -20,8 +25,9 @@ class SplitLearning(Strategy):
     name = "sl"
 
     def __init__(self, adapter, opt_factory, n_clients, schedule="ac",
-                 transport=None, privacy=None):
-        super().__init__(adapter, opt_factory, n_clients, privacy=privacy)
+                 transport=None, privacy=None, **kw):
+        super().__init__(adapter, opt_factory, n_clients, privacy=privacy,
+                         **kw)
         self.schedule = schedule
         self.transport = transport
         self.name = f"sl_{schedule}"
@@ -54,9 +60,14 @@ class SplitLearning(Strategy):
                 "c_opts": c_opts, "s_opt": opt_s.init(server)}
 
     def run_epoch(self, state, client_data, rng, batch_size):
-        batches = [np_batches(d, batch_size, rng) for d in client_data]
+        if self.engine == "compiled":
+            return self._run_epoch_compiled(state, client_data, rng,
+                                            batch_size)
+        batches = [np_batches(d, batch_size, rng, self.drop_remainder)
+                   for d in client_data]
         order = SCHEDULES[self.schedule]([len(b) for b in batches])
-        losses = []
+        losses, loss_w = [], []
+        client_steps = [0] * self.n_clients
         for c, b in order:
             args = (state["clients"][c], state["server"],
                     state["c_opts"][c], state["s_opt"], batches[c][b])
@@ -65,18 +76,74 @@ class SplitLearning(Strategy):
             (state["clients"][c], state["server"], state["c_opts"][c],
              state["s_opt"], loss) = self._step(*args)
             losses.append(float(loss))
+            loss_w.append(len(batches[c][b]["label"]))
+            client_steps[c] += 1
             self._dp_account(c, len(client_data[c]["label"]), batch_size)
             if self.transport is not None:
                 self.transport.account(self.adapter, batches[c][b])
         self._end_of_epoch(state)
-        return state, EpochLog(losses, len(losses))
+        return state, EpochLog(losses, len(losses), weights=loss_w,
+                               client_steps=client_steps)
+
+    def _ensure_stacked(self, state):
+        """Compiled SL/SFLv2 state keeps the hospital axis stacked BETWEEN
+        epochs too — unstacking n_clients x n_leaves every epoch costs more
+        host time than the compiled epoch itself."""
+        from repro.core.partition import stack_trees
+        if "stacked_clients" not in state:
+            state["stacked_clients"] = stack_trees(state.pop("clients"))
+            state["stacked_c_opts"] = stack_trees(state.pop("c_opts"))
+
+    def _run_epoch_compiled(self, state, client_data, rng, batch_size):
+        from repro.core.strategies import engine as ENG
+        packed = ENG.pack_epoch(client_data, batch_size, rng,
+                                self.drop_remainder)
+        sched = schedule_array(self.schedule, packed.n_batches)
+        if len(sched) == 0:
+            self._end_of_epoch(state)        # SFLv2 still syncs clients
+            return state, EpochLog([], 0,
+                                   client_steps=[0] * self.n_clients)
+        if not hasattr(self, "_epoch_c"):
+            self._epoch_c = ENG.make_interleaved_epoch(
+                self.adapter, self._opt_c, self._opt_s, self.transport,
+                self.privacy)
+        key_idx = (self._take_key_indices(len(sched)) if self._keyed
+                   else np.zeros((len(sched),), np.uint32))
+        self._ensure_stacked(state)
+        (state["stacked_clients"], state["server"],
+         state["stacked_c_opts"], state["s_opt"], losses) = self._epoch_c(
+            state["stacked_clients"], state["server"],
+            state["stacked_c_opts"], state["s_opt"], packed.batches,
+            packed.ex_weights, sched, key_idx, self._privacy_base_key())
+        flat, loss_w = ENG.scheduled_log(losses, sched, packed)
+        self._account_compiled(packed, batch_size)
+        self._end_of_epoch(state)
+        return state, EpochLog(flat, len(flat), weights=loss_w,
+                               client_steps=list(packed.n_batches))
+
+    def _account_compiled(self, packed, batch_size):
+        """Analytic per-epoch accounting for the compiled path: the DP
+        accountant composes each hospital's step count in one call, and
+        the transport meters the full-batch boundary shapes once per valid
+        step (padded remainder batches are metered at the padded shape)."""
+        example = {k: v[0, 0] for k, v in packed.batches.items()}
+        for c, nb in enumerate(packed.n_batches):
+            if not nb:
+                continue
+            self._dp_account(c, packed.n_samples[c], batch_size, count=nb)
+            if self.transport is not None:
+                self.transport.account(self.adapter, example, count=nb)
 
     def _end_of_epoch(self, state):
         pass
 
     def params_for_eval(self, state, client_idx):
-        p = {"front": state["clients"][client_idx]["front"],
-             "middle": state["server"]}
+        if "stacked_clients" in state:           # compiled-engine layout
+            from repro.core.partition import tree_take
+            ct = tree_take(state["stacked_clients"], client_idx)
+        else:
+            ct = state["clients"][client_idx]
+        p = {"front": ct["front"], "middle": state["server"]}
         if self.adapter.nls:
-            p["tail"] = state["clients"][client_idx]["tail"]
+            p["tail"] = ct["tail"]
         return p

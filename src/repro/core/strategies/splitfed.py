@@ -15,14 +15,20 @@ round; trained with Adam@1e-4 for 10 rounds that cannot reach the reported
 AUROC. We use the batch-synchronous reading (one averaged server update per
 mini-batch step, "same as SplitFedv1" per the paper's own description),
 which matches the reported training times and accuracies.
+
+Under the compiled engine SFLv2 inherits SL's scanned interleave (its server
+is sequential too); SFLv3/v1 scan over synchronous steps with the vmapped
+per-client step inside and the wrap-around batch index precomputed as a
+dense ``[steps, n_clients]`` array.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
+from repro.core.partition import stack_trees
 from repro.core.strategies.base import (EpochLog, make_sflv3_step,
-                                        np_batches, stack_trees, tree_mean)
+                                        np_batches, tree_mean)
 from repro.core.strategies.split import SplitLearning
 
 
@@ -30,12 +36,17 @@ class SplitFedV2(SplitLearning):
     """Sequential server training + end-of-epoch client averaging."""
 
     def __init__(self, adapter, opt_factory, n_clients, schedule="ac",
-                 transport=None, privacy=None):
+                 transport=None, privacy=None, **kw):
         super().__init__(adapter, opt_factory, n_clients, schedule,
-                         transport, privacy)
+                         transport, privacy, **kw)
         self.name = f"sflv2_{schedule}"
 
     def _end_of_epoch(self, state):
+        if "stacked_clients" in state:           # compiled-engine layout
+            from repro.core.strategies.engine import stacked_mean_sync
+            state["stacked_clients"] = stacked_mean_sync(
+                state["stacked_clients"])
+            return
         avg = tree_mean(state["clients"])
         state["clients"] = [avg for _ in range(self.n_clients)]
 
@@ -44,9 +55,14 @@ class SplitFedV3(SplitLearning):
     """Unique clients + gradient-averaged parallel server updates (Alg. 1)."""
 
     def __init__(self, adapter, opt_factory, n_clients, schedule="ac",
-                 transport=None, privacy=None):
+                 transport=None, privacy=None, **kw):
         super().__init__(adapter, opt_factory, n_clients, schedule,
-                         transport, privacy)
+                         transport, privacy, **kw)
+        if not self.drop_remainder:
+            raise ValueError(
+                "SplitFedV3/V1 are batch-synchronous: every client ships a "
+                "same-shaped batch each step, so drop_remainder=False is "
+                "not representable; use drop_remainder=True")
         self.name = f"sflv3_{schedule}"
 
     def setup(self, key):
@@ -68,9 +84,8 @@ class SplitFedV3(SplitLearning):
         return {"stacked_clients": stacked, "server": server,
                 "c_opt": opt_c.init(stacked), "s_opt": opt_s.init(server)}
 
-    def run_epoch(self, state, client_data, rng, batch_size):
-        batches = [np_batches(d, batch_size, rng) for d in client_data]
-        empty = [c for c, b in enumerate(batches) if not b]
+    def _check_batches(self, n_batches, batch_size):
+        empty = [c for c, nb in enumerate(n_batches) if not nb]
         if empty:
             # batch-synchronous SFLv3 averages over ALL clients every step;
             # a client without a single full batch cannot participate
@@ -78,6 +93,13 @@ class SplitFedV3(SplitLearning):
                 f"clients {empty} have fewer than batch_size="
                 f"{batch_size} train samples; SplitFedV3 needs at least "
                 "one batch per client")
+
+    def run_epoch(self, state, client_data, rng, batch_size):
+        if self.engine == "compiled":
+            return self._run_epoch_compiled(state, client_data, rng,
+                                            batch_size)
+        batches = [np_batches(d, batch_size, rng) for d in client_data]
+        self._check_batches([len(b) for b in batches], batch_size)
         steps = max(len(b) for b in batches)
         losses = []
         for s in range(steps):
@@ -103,14 +125,49 @@ class SplitFedV3(SplitLearning):
                     self.transport.account(self.adapter,
                                            batches[c][s % len(batches[c])])
         self._end_of_epoch(state)
-        return state, EpochLog(losses, steps)
+        return state, EpochLog(losses, steps,
+                               client_steps=[steps] * self.n_clients)
+
+    def _run_epoch_compiled(self, state, client_data, rng, batch_size):
+        from repro.core.strategies import engine as ENG
+        packed = ENG.pack_epoch(client_data, batch_size, rng, True)
+        self._check_batches(packed.n_batches, batch_size)
+        steps = packed.nb_max
+        if not hasattr(self, "_epoch_c"):
+            self._epoch_c = ENG.make_sflv3_epoch(
+                self.adapter, self._opt_c, self._opt_s, self.n_clients,
+                self.transport, self.privacy)
+        b_idx = np.stack([[s % nb for nb in packed.n_batches]
+                          for s in range(steps)]).astype(np.int32)
+        key_idx = (self._take_key_indices(steps) if self._keyed
+                   else np.zeros((steps,), np.uint32))
+        batches = ENG.maybe_shard(packed.batches, self.n_clients,
+                                  self.shard)
+        sc = ENG.maybe_shard(state["stacked_clients"], self.n_clients,
+                             self.shard)
+        (state["stacked_clients"], state["server"], state["c_opt"],
+         state["s_opt"], losses) = self._epoch_c(
+            sc, state["server"], state["c_opt"], state["s_opt"], batches,
+            b_idx, key_idx, self._privacy_base_key())
+        flat = np.asarray(losses).reshape(-1).tolist()
+        example = {k: v[0, 0] for k, v in packed.batches.items()}
+        for c in range(self.n_clients):
+            # wrap-around resampling included: every client is touched
+            # every step, so the analytic count is simply ``steps``
+            self._dp_account(c, packed.n_samples[c], batch_size,
+                             count=steps)
+            if self.transport is not None:
+                self.transport.account(self.adapter, example, count=steps)
+        self._end_of_epoch(state)
+        return state, EpochLog(flat, steps,
+                               client_steps=[steps] * self.n_clients)
 
     def _end_of_epoch(self, state):
         pass
 
     def params_for_eval(self, state, client_idx):
-        import jax
-        ct = jax.tree.map(lambda x: x[client_idx], state["stacked_clients"])
+        from repro.core.partition import tree_take
+        ct = tree_take(state["stacked_clients"], client_idx)
         p = {"front": ct["front"], "middle": state["server"]}
         if self.adapter.nls:
             p["tail"] = ct["tail"]
@@ -121,14 +178,12 @@ class SplitFedV1(SplitFedV3):
     """Parallel server (like v3) + fed-averaged clients each round."""
 
     def __init__(self, adapter, opt_factory, n_clients, schedule="ac",
-                 transport=None, privacy=None):
+                 transport=None, privacy=None, **kw):
         super().__init__(adapter, opt_factory, n_clients, schedule,
-                         transport, privacy)
+                         transport, privacy, **kw)
         self.name = f"sflv1_{schedule}"
 
     def _end_of_epoch(self, state):
-        import jax
-        import jax.numpy as jnp
-        avg = jax.tree.map(lambda x: jnp.broadcast_to(
-            x.mean(axis=0, keepdims=True), x.shape), state["stacked_clients"])
-        state["stacked_clients"] = avg
+        from repro.core.strategies.engine import stacked_mean_sync
+        state["stacked_clients"] = stacked_mean_sync(
+            state["stacked_clients"])

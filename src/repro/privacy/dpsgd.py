@@ -77,6 +77,18 @@ def keyed(loss_fn):
     return lambda params, batch, key: loss_fn(params, batch)
 
 
+def step_key(base_key, index):
+    """Per-step key as ``fold_in(base_key, index)``.
+
+    ``index`` may be a Python int (the stepwise engine's running counter)
+    or a traced uint32 scan index (the compiled engine folds the reserved
+    counter value in INSIDE the epoch scan) — both derive bit-identical
+    keys, which is what keeps DP/cut-noise draws equal across engines and
+    lets accountant step counts be derived analytically per epoch.
+    """
+    return jax.random.fold_in(base_key, index)
+
+
 def _expand_batch(batch):
     """(B, ...) batch dict -> per-example batches of size 1 along axis 0."""
     return jax.tree.map(lambda v: v[:, None], batch)

@@ -42,11 +42,15 @@ class Transport:
         return tree_roundtrip(self.codec, tree)
 
     # -- host-side accounting ------------------------------------------------
-    def account(self, adapter, batch: dict, train: bool = True):
-        """Record one step's boundary traffic (activations up + grads down).
+    def account(self, adapter, batch: dict, train: bool = True,
+                count: int = 1):
+        """Record ``count`` steps' boundary traffic (activations up + grads
+        down per step).
 
         Cached on the batch's shape signature, so per-step cost after the
-        first call is a dict lookup.
+        first call is a dict lookup.  The compiled engine accounts a whole
+        epoch analytically in one call per hospital (``count=n_batches``)
+        instead of once per host-loop step.
         """
         key = tuple(sorted((k, tuple(v.shape), str(v.dtype))
                            for k, v in batch.items()))
@@ -59,9 +63,9 @@ class Transport:
             self._cache[key] = (wire, raw)
         wire, raw = self._cache[key]
         legs = 2 if train else 1           # train: + gradient leg back
-        self.bytes_on_wire += legs * wire
-        self.bytes_raw += legs * raw
-        self.steps += 1
+        self.bytes_on_wire += count * legs * wire
+        self.bytes_raw += count * legs * raw
+        self.steps += count
 
     @property
     def compression_ratio(self) -> float:

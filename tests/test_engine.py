@@ -1,0 +1,244 @@
+"""Compiled-engine tests: pad-and-mask packing, schedule arrays, and the
+stepwise-vs-compiled parity suite (params, losses, accountant)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro import optim as O
+from repro.core.partition import cnn_adapter
+from repro.core.schedule import SCHEDULES, schedule_array
+from repro.core.strategies import make_strategy
+from repro.core.strategies.base import EpochLog, np_batches
+from repro.core.strategies.engine import pack_epoch
+from repro.data.synthetic import make_cxr_clients
+from repro.models.cnn import DenseNetConfig, build_densenet
+from repro.privacy import PrivacyConfig
+
+METHODS = ["fl", "sl_ac", "sl_am", "sflv2_ac", "sflv3_ac"]
+DP = PrivacyConfig(noise_multiplier=1.1, clip_norm=1.0)
+CUT = PrivacyConfig(cut_noise_std=0.5)
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    # uneven hospitals (17/12/9 @ batch 4) => masked steps + remainders
+    clients = make_cxr_clients(seed=0, train_per_client=[17, 12, 9],
+                               val_per_client=6, test_per_client=7,
+                               image_size=16, n_clients=3)
+    cfg = DenseNetConfig(growth=4, blocks=(1, 1), stem_ch=8, cut_layer=1)
+    return clients, cnn_adapter(build_densenet(cfg))
+
+
+def _run(method, engine, clients, adapter, privacy=None, epochs=1,
+         drop_remainder=True, batch=4):
+    st = make_strategy(method, adapter, lambda: O.adam(1e-3), len(clients),
+                       privacy=privacy, engine=engine,
+                       drop_remainder=drop_remainder)
+    state = st.setup(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    log = None
+    for _ in range(epochs):
+        state, log = st.run_epoch(state, [c.train for c in clients], rng,
+                                  batch)
+    return st, state, log
+
+
+def _assert_parity(method, clients, adapter, privacy=None, epochs=1,
+                   drop_remainder=True, atol=1e-5):
+    st_a, sa, la = _run(method, "stepwise", clients, adapter, privacy,
+                        epochs, drop_remainder)
+    st_b, sb, lb = _run(method, "compiled", clients, adapter, privacy,
+                        epochs, drop_remainder)
+    assert len(la.losses) == len(lb.losses)
+    np.testing.assert_allclose(la.losses, lb.losses, atol=atol)
+    assert abs(la.mean_loss - lb.mean_loss) < atol
+    assert la.client_steps == lb.client_steps
+    for i in range(len(clients)):
+        pa, pb = st_a.params_for_eval(sa, i), st_b.params_for_eval(sb, i)
+        for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       atol=atol)
+    ra, rb = st_a.privacy_report(), st_b.privacy_report()
+    assert len(ra) == len(rb)
+    for x, y in zip(ra, rb):
+        assert x["steps"] == y["steps"]
+        assert abs(x["epsilon"] - y["epsilon"]) < 1e-9
+        assert x["delta"] == y["delta"]
+
+
+# ---------------------------------------------------------------------------
+# parity suite (acceptance: <= 1e-5 on params/losses, privacy on and off)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", METHODS)
+def test_parity_plain(method, tiny_setup):
+    clients, adapter = tiny_setup
+    _assert_parity(method, clients, adapter)
+
+
+def test_parity_multi_epoch_and_centralized(tiny_setup):
+    clients, adapter = tiny_setup
+    _assert_parity("fl", clients, adapter, epochs=2)
+    _assert_parity("centralized", clients, adapter, epochs=2)
+
+
+@pytest.mark.parametrize("method", ["fl", "sl_am", "sflv3_ac"])
+def test_parity_dp(method, tiny_setup):
+    """DP-SGD draws are key-indexed fold-ins: bit-identical across engines,
+    and the analytic accountant composition matches step-by-step counts."""
+    clients, adapter = tiny_setup
+    _assert_parity(method, clients, adapter, privacy=DP)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method", ["sl_ac", "sflv2_ac"])
+def test_parity_dp_full_grid(method, tiny_setup):
+    clients, adapter = tiny_setup
+    _assert_parity(method, clients, adapter, privacy=DP, epochs=2)
+
+
+def test_parity_cut_noise(tiny_setup):
+    clients, adapter = tiny_setup
+    _assert_parity("sl_ac", clients, adapter, privacy=CUT)
+
+
+def test_parity_fl_secagg(tiny_setup):
+    """secagg keeps the host-side masked aggregation on the compiled path
+    (per-client uploads must exist to be masked)."""
+    clients, adapter = tiny_setup
+    _assert_parity("fl", clients, adapter,
+                   privacy=PrivacyConfig(secagg=True))
+
+
+@pytest.mark.parametrize("method", ["fl", "sl_am"])
+def test_parity_keep_remainder(method, tiny_setup):
+    """drop_remainder=False: stepwise short batches == compiled
+    pad-and-mask per-example weights."""
+    clients, adapter = tiny_setup
+    _assert_parity(method, clients, adapter, drop_remainder=False)
+
+
+# ---------------------------------------------------------------------------
+# np_batches remainder handling (satellite)
+# ---------------------------------------------------------------------------
+
+def test_np_batches_remainder():
+    data = {"x": np.arange(11)[:, None], "label": np.arange(11)}
+    dropped = np_batches(data, 4, None)
+    assert [len(b["label"]) for b in dropped] == [4, 4]      # 3 lost
+    kept = np_batches(data, 4, None, drop_remainder=False)
+    assert [len(b["label"]) for b in kept] == [4, 4, 3]
+    assert sorted(np.concatenate([b["label"] for b in kept])) == list(
+        range(11))
+    # shuffles must be identical across the two modes
+    a = np_batches(data, 4, np.random.default_rng(7))
+    b = np_batches(data, 4, np.random.default_rng(7),
+                   drop_remainder=False)
+    np.testing.assert_array_equal(a[0]["label"], b[0]["label"])
+
+
+def test_pack_epoch_matches_np_batches():
+    data = [{"x": np.arange(10, dtype=np.float32)[:, None],
+             "label": np.arange(10)},
+            {"x": np.arange(5, dtype=np.float32)[:, None],
+             "label": np.arange(5)}]
+    packed = pack_epoch(data, 2, np.random.default_rng(3))
+    assert packed.mask.shape == (2, 5)
+    assert packed.n_batches == [5, 2]
+    assert packed.mask[1].tolist() == [True, True, False, False, False]
+    # same rng stream => identical batch contents as the stepwise path
+    # (ONE generator consumed in hospital order, as strategies do)
+    rng = np.random.default_rng(3)
+    stepwise = [np_batches(d, 2, rng) for d in data]
+    for c, bs in enumerate(stepwise):
+        for j, b in enumerate(bs):
+            np.testing.assert_array_equal(
+                packed.batches["label"][c, j], b["label"])
+    # padding rows are flagged invalid, remainder kept under pad-and-mask
+    kept = pack_epoch(data, 3, np.random.default_rng(0),
+                      drop_remainder=False)
+    assert kept.n_batches == [4, 2]
+    assert kept.ex_weights[0, 3].tolist() == [1.0, 0.0, 0.0]
+    assert kept.step_examples[0] == [3, 3, 3, 1]
+
+
+def test_schedule_array_matches_schedules():
+    nb = [3, 1, 2]
+    for name in ("ac", "am"):
+        arr = schedule_array(name, nb)
+        assert arr.dtype == np.int32 and arr.shape == (6, 2)
+        assert [tuple(r) for r in arr] == SCHEDULES[name](nb)
+
+
+# ---------------------------------------------------------------------------
+# EpochLog statistics (satellite)
+# ---------------------------------------------------------------------------
+
+def test_epochlog_mask_aware_mean():
+    log = EpochLog([1.0, 3.0], 2)
+    assert log.mean_loss == 2.0
+    weighted = EpochLog([1.0, 3.0], 2, weights=[3, 1])
+    assert weighted.mean_loss == pytest.approx(1.5)
+    assert EpochLog([], 0).mean_loss != EpochLog([], 0).mean_loss  # nan
+
+
+def test_epochlog_stats_identical_across_engines(tiny_setup):
+    clients, adapter = tiny_setup
+    _, _, la = _run("fl", "stepwise", clients, adapter,
+                    drop_remainder=False)
+    _, _, lb = _run("fl", "compiled", clients, adapter,
+                    drop_remainder=False)
+    assert la.weights == lb.weights
+    assert la.client_steps == lb.client_steps == [5, 3, 3]
+    assert abs(la.mean_loss - lb.mean_loss) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# engine guards
+# ---------------------------------------------------------------------------
+
+def test_engine_guards(tiny_setup):
+    clients, adapter = tiny_setup
+    with pytest.raises(ValueError):
+        make_strategy("fl", adapter, lambda: O.adam(1e-3), 3,
+                      engine="warp")
+    with pytest.raises(ValueError):                 # keyed + partial batches
+        make_strategy("fl", adapter, lambda: O.adam(1e-3), 3, privacy=DP,
+                      engine="compiled", drop_remainder=False)
+    with pytest.raises(ValueError):                 # batch-synchronous v3
+        make_strategy("sflv3_ac", adapter, lambda: O.adam(1e-3), 3,
+                      drop_remainder=False)
+
+
+# ---------------------------------------------------------------------------
+# batched eval (satellite): one dispatch for every hospital
+# ---------------------------------------------------------------------------
+
+def test_scores_all_matches_per_hospital(tiny_setup):
+    clients, adapter = tiny_setup
+    st, state, _ = _run("sl_ac", "compiled", clients, adapter)
+    datas = [c.test for c in clients]
+    batched = st.scores_all(state, datas, batch_size=4)
+    for i, d in enumerate(datas):
+        assert len(batched[i]) == len(d["label"]) == 7   # partial kept
+        single = st.scores(state, i, d, batch_size=4)
+        np.testing.assert_allclose(batched[i], single, atol=1e-6)
+    m = st.evaluate(state, clients, "test", batch_size=4)
+    assert 0.0 <= m["auroc"] <= 1.0
+
+
+def test_transport_accounting_compiled_matches_stepwise(tiny_setup):
+    from repro.wire import Transport
+    clients, adapter = tiny_setup
+    byt = {}
+    for engine in ("stepwise", "compiled"):
+        tp = Transport("identity")
+        st = make_strategy("sl_am", adapter, lambda: O.adam(1e-3),
+                           len(clients), transport=tp, engine=engine)
+        state = st.setup(jax.random.key(0))
+        st.run_epoch(state, [c.train for c in clients],
+                     np.random.default_rng(0), 4)
+        byt[engine] = (tp.steps, tp.bytes_on_wire)
+    assert byt["stepwise"] == byt["compiled"]
