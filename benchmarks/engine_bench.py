@@ -1,19 +1,33 @@
-"""Engine benchmark — stepwise (host-loop) vs compiled (scan/vmap) epochs.
+"""Engine benchmark — stepwise (host-loop) vs compiled (scan/vmap) epochs
+and whole runs.
 
-For each method and hospital count, trains the same synthetic CXR task with
-both execution engines and reports steps/sec and epoch wall-clock (median
-over timed epochs, compile/warm-up epoch excluded for BOTH engines — the
-comparison is steady-state dispatch cost, which is what dominates the
-many-hospital sweeps in ROADMAP's production target).
+For each method and hospital count, trains the same synthetic CXR task
+with both execution engines and reports steps/sec and epoch wall-clock
+(median over timed epochs, compile/warm-up epoch excluded for BOTH
+engines — the comparison is steady-state dispatch cost, which is what
+dominates the many-hospital sweeps in ROADMAP's production target).  A
+second column times ``Strategy.run(n_epochs=RUN_EPOCHS)`` — the compiled
+engine executes the whole run as ONE XLA program, the stepwise engine as
+a per-epoch loop.
 
 Writes ``benchmarks/results/BENCH_engine.json``:
 
-    {"results": [{"method", "n_clients", "engine", "steps_per_epoch",
-                  "epoch_seconds", "steps_per_sec"}, ...],
-     "speedup": {"fl@10": 7.3, ...}}   # compiled / stepwise steps/sec
+    {"results": [{"method", "n_clients", "engine", "mode",
+                  "steps_per_epoch", "epoch_seconds", "steps_per_sec"},
+                 ...],
+     "speedup": {"fl@10": 7.3,          # compiled / stepwise, one epoch
+                 "fl@10:run3": 9.1}}    # whole 3-epoch run
+
+``--check-against BENCH.json`` re-reads a committed baseline and FAILS
+(exit 1) if any matching compiled-vs-stepwise speedup regressed by more
+than 20%.  Speedups are regime-sensitive (steps per epoch change how far
+dispatch overhead is amortized), so gate like against like: the slow CI
+job runs the smoke grid against the committed
+``benchmarks/results/BENCH_engine_smoke.json``.
 
   PYTHONPATH=src python -m benchmarks.engine_bench [--smoke]
       [--methods fl,sl_am,sflv3_ac] [--clients 3,10,50] [--epochs N]
+      [--run-epochs 3] [--check-against PATH]
 """
 
 from __future__ import annotations
@@ -21,6 +35,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import sys
 import time
 
 import jax
@@ -69,8 +84,57 @@ def time_engine(method, engine, clients, adapter, batch_size, epochs):
         times.append(time.perf_counter() - t0)
     sec = float(np.median(times))
     return {"method": method, "n_clients": len(clients), "engine": engine,
-            "steps_per_epoch": log.steps, "epoch_seconds": sec,
+            "mode": "epoch", "steps_per_epoch": log.steps,
+            "epoch_seconds": sec,
             "steps_per_sec": log.steps / sec if sec > 0 else float("inf")}
+
+
+def time_whole_run(method, engine, clients, adapter, batch_size,
+                   run_epochs, reps):
+    """Time ``Strategy.run(n_epochs=run_epochs)`` — ONE program under the
+    compiled engine, a per-epoch loop under stepwise."""
+    strat = make_strategy(method, adapter, lambda: O.adam(1e-3),
+                          len(clients), engine=engine)
+    state = strat.setup(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    data = [c.train for c in clients]
+    state, logs = strat.run(state, data, rng, batch_size, run_epochs)
+    times = []
+    for _ in range(reps):
+        jax.block_until_ready(jax.tree.leaves(
+            state.get("params", state.get("server")))[0])
+        t0 = time.perf_counter()
+        state, logs = strat.run(state, data, rng, batch_size, run_epochs)
+        jax.block_until_ready(jax.tree.leaves(
+            state.get("params", state.get("server")))[0])
+        times.append(time.perf_counter() - t0)
+    sec = float(np.median(times))
+    steps = sum(l.steps for l in logs)
+    return {"method": method, "n_clients": len(clients), "engine": engine,
+            "mode": f"run{run_epochs}", "steps_per_epoch": steps,
+            "epoch_seconds": sec,
+            "steps_per_sec": steps / sec if sec > 0 else float("inf")}
+
+
+def check_against(baseline_path: str, speedup: dict,
+                  max_regression: float = 0.2) -> list[str]:
+    """Compare fresh compiled-vs-stepwise speedups to a committed
+    baseline; a key regressing below ``(1 - max_regression) x`` its
+    committed value is a failure."""
+    with open(baseline_path) as f:
+        committed = json.load(f).get("speedup", {})
+    failures = []
+    for key, new in speedup.items():
+        old = committed.get(key)
+        if old is None:
+            continue
+        floor = (1.0 - max_regression) * old
+        status = "OK" if new >= floor else "REGRESSED"
+        print(f"  gate {key:16s} committed {old:6.2f}x  now {new:6.2f}x "
+              f"(floor {floor:.2f}x)  {status}")
+        if new < floor:
+            failures.append(key)
+    return failures
 
 
 def main():
@@ -80,9 +144,14 @@ def main():
     ap.add_argument("--methods", default=None)
     ap.add_argument("--clients", default=None)
     ap.add_argument("--epochs", type=int, default=None)
+    ap.add_argument("--run-epochs", type=int, default=3,
+                    help="whole-run column: epochs per Strategy.run call")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--train-per-client", type=int, default=None)
     ap.add_argument("--out", default=OUT)
+    ap.add_argument("--check-against", default=None,
+                    help="committed BENCH_engine.json to gate speedups "
+                         "against (fail on >20%% regression)")
     args = ap.parse_args()
 
     methods = (args.methods.split(",") if args.methods
@@ -97,29 +166,46 @@ def main():
     for n in clients_grid:
         clients, adapter = build_setup(n, tpc, image_size=8)
         for method in methods:
-            row = {}
-            for engine in ("stepwise", "compiled"):
-                r = time_engine(method, engine, clients, adapter,
-                                args.batch, epochs)
-                results.append(r)
-                row[engine] = r
-                print(f"{method:10s} n={n:3d} {engine:9s} "
-                      f"{r['steps_per_sec']:9.1f} steps/s "
-                      f"({r['epoch_seconds'] * 1e3:8.1f} ms/epoch)")
-            sp = (row["compiled"]["steps_per_sec"]
-                  / row["stepwise"]["steps_per_sec"])
-            speedup[f"{method}@{n}"] = round(sp, 2)
-            print(f"{method:10s} n={n:3d} speedup   {sp:9.2f}x")
+            for mode_fn, tag in (
+                    (lambda m, e: time_engine(m, e, clients, adapter,
+                                              args.batch, epochs), ""),
+                    (lambda m, e: time_whole_run(m, e, clients, adapter,
+                                                 args.batch,
+                                                 args.run_epochs, epochs),
+                     f":run{args.run_epochs}")):
+                row = {}
+                for engine in ("stepwise", "compiled"):
+                    r = mode_fn(method, engine)
+                    results.append(r)
+                    row[engine] = r
+                    print(f"{method:10s} n={n:3d} {engine:9s} "
+                          f"{r['mode']:6s} {r['steps_per_sec']:9.1f} "
+                          f"steps/s "
+                          f"({r['epoch_seconds'] * 1e3:8.1f} ms)")
+                sp = (row["compiled"]["steps_per_sec"]
+                      / row["stepwise"]["steps_per_sec"])
+                speedup[f"{method}@{n}{tag}"] = round(sp, 2)
+                print(f"{method:10s} n={n:3d} speedup {row['compiled']['mode']:8s}"
+                      f" {sp:7.2f}x")
 
     out = {"device": jax.devices()[0].device_kind,
            "batch_size": args.batch, "train_per_client": tpc,
-           "epochs_timed": epochs, "results": results, "speedup": speedup}
+           "epochs_timed": epochs, "run_epochs": args.run_epochs,
+           "results": results, "speedup": speedup}
     out_dir = os.path.dirname(args.out)
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
     print(f"wrote {args.out}")
+
+    if args.check_against:
+        failures = check_against(args.check_against, speedup)
+        if failures:
+            print(f"FAIL: speedup regressed >20% vs committed baseline "
+                  f"for {failures}")
+            sys.exit(1)
+        print("speedup gate OK (within 20% of committed baseline)")
 
 
 if __name__ == "__main__":

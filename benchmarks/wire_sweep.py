@@ -5,7 +5,11 @@ transfer DAG through each (codec, scenario) pair and report bytes-on-wire,
 simulated wall-clock, straggler sensitivity and per-client idle fractions.
 The identity codec's byte total is cross-checked against the analytic
 profile of ``repro.core.comm`` (paper Table 4) — the run fails loudly if
-they disagree by more than 1%.
+they disagree by more than 1%.  A second gate feeds a ``Transport`` the
+exact per-epoch accounting the (default) compiled engine emits and checks
+``timeline_from_accounting`` replays it to the same wall-clock and
+per-tag bytes as ``simulate`` — so the sweep's numbers are valid
+whichever engine trained.
 
 Writes ``benchmarks/results/wire_sweep.json`` + ``.md``.
 
@@ -21,11 +25,11 @@ import os
 
 import numpy as np
 
-from repro.core.comm import comm_per_epoch
+from repro.core.comm import client_batch_counts, comm_per_epoch
 from repro.core.partition import cnn_adapter
 from repro.models.cnn import DenseNetConfig, build_densenet
-from repro.wire import (make_codec, make_network, simulate,
-                        straggler_sensitivity)
+from repro.wire import (Transport, make_codec, make_network, simulate,
+                        straggler_sensitivity, timeline_from_accounting)
 
 DEFAULT_METHODS = ["fl", "sl_ac", "sl_am", "sflv2_ac", "sflv3_ac"]
 DEFAULT_CODECS = ["identity", "bf16", "int8", "topk:0.1"]
@@ -67,6 +71,34 @@ def check_identity_matches_analytic(adapter, example, n_tr, n_va) -> list:
             raise AssertionError(
                 f"{method}: simulated bytes {sim:.0f} vs analytic "
                 f"{analytic:.0f} differ by {rel:.2%} (> 1%)")
+    return rows
+
+
+def check_accounting_bridge(adapter, example, n_tr, n_va) -> list:
+    """Acceptance gate: a Transport fed the compiled engine's analytic
+    per-epoch accounting must replay (``timeline_from_accounting``) to the
+    same wall-clock and per-tag bytes as the from-scratch ``simulate``."""
+    rows = []
+    tr_counts, _ = client_batch_counts(n_tr, n_va, BATCH)
+    for method in ("sl_ac", "sl_am", "sflv2_ac", "sflv3_ac"):
+        kind, _, schedule = method.partition("_")
+        tp = Transport("identity")
+        # exactly what the compiled engine's _account_compiled emits
+        tp.record_epoch(adapter, example, kind, schedule, tr_counts)
+        for nb in tr_counts:
+            tp.account(adapter, example, count=nb)
+        sim = simulate(method, adapter, example, n_tr, n_va, BATCH,
+                       "identity", "lan", seed=0, keep_events=False)
+        acc = timeline_from_accounting(tp, n_val=n_va, batch_size=BATCH,
+                                       network="lan", seed=0,
+                                       keep_events=False)
+        if (acc.wall_clock_s != sim.wall_clock_s
+                or acc.breakdown != sim.breakdown):
+            raise AssertionError(
+                f"{method}: accounting-fed timeline diverges from "
+                f"simulate ({acc.wall_clock_s} vs {sim.wall_clock_s} s)")
+        rows.append({"method": method, "wall_clock_s": acc.wall_clock_s,
+                     "bytes_on_wire": acc.bytes_on_wire})
     return rows
 
 
@@ -146,6 +178,11 @@ def main(argv=None):
     for r in check_rows:
         print(f"  {r['method']:9s} rel_err={r['rel_err']:.2e}  OK")
 
+    print("cross-checking analytic-accounting timelines vs simulate ...")
+    bridge_rows = check_accounting_bridge(adapter, example, n_tr, n_va)
+    for r in bridge_rows:
+        print(f"  {r['method']:9s} wall={r['wall_clock_s']:.2f}s  OK")
+
     print("sweeping ...")
     rows = sweep(adapter, example, n_tr, n_va, args.methods.split(","),
                  args.codecs.split(","), args.scenarios.split(","),
@@ -153,7 +190,8 @@ def main(argv=None):
 
     os.makedirs(args.out, exist_ok=True)
     with open(os.path.join(args.out, "wire_sweep.json"), "w") as f:
-        json.dump({"check": check_rows, "sweep": rows}, f, indent=1)
+        json.dump({"check": check_rows, "bridge_check": bridge_rows,
+                   "sweep": rows}, f, indent=1)
     md = markdown_report(check_rows, rows)
     with open(os.path.join(args.out, "wire_sweep.md"), "w") as f:
         f.write(md)

@@ -9,8 +9,13 @@ and ``repro.wire.simulator`` replays the same legs through a network model
 One epoch = training over all train batches + validation over all val
 batches (paper §4.3).  Per train batch the cut-layer traffic is:
   LS : activations up + activation-gradients down           (front<->middle)
-  NLS: + hidden up + hidden-gradients down                  (middle<->tail)
-Validation moves activations only (no gradients).
+  NLS: + hidden down + hidden-gradients up                  (middle<->tail)
+Validation moves activations only (no gradients).  Breakdown keys name
+the transfer's physical direction (client->server = up, server->client =
+down): in the U-shaped NLS split the server's hidden output travels DOWN
+to the client-held tail and its gradient back UP — ``repro.wire`` tags
+its simulated transfers with the same keys, so per-tag breakdowns are
+comparable across the analytic and simulated accounting.
 
 FL moves 2 x model bytes per client per round; SFLv2 additionally moves the
 client segment back and forth for fed-averaging; SFLv3's averaged segment
@@ -113,9 +118,9 @@ def comm_per_epoch(method: str, adapter: SplitAdapter, example_batch: dict,
         bd["train_grad_down"] = act_fm * train_batches
         bd["val_act_up"] = act_fm * val_batches
         if adapter.nls:
-            bd["train_hidden_up"] = act_mt * train_batches
-            bd["train_hidden_grad_down"] = act_mt * train_batches
-            bd["val_hidden_up"] = act_mt * val_batches
+            bd["train_hidden_down"] = act_mt * train_batches
+            bd["train_hidden_grad_up"] = act_mt * train_batches
+            bd["val_hidden_down"] = act_mt * val_batches
         if method.startswith("sflv2") or method.startswith("sflv1"):
             # client segments shipped to fed server and back for averaging
             bd["client_seg_avg"] = 2 * legs["client_seg"] * len(n_train)

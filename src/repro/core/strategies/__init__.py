@@ -8,7 +8,7 @@ from repro.core.strategies.splitfed import SplitFedV1, SplitFedV2, SplitFedV3
 
 
 def make_strategy(method: str, adapter, opt_factory, n_clients,
-                  transport=None, privacy=None, engine="stepwise",
+                  transport=None, privacy=None, engine="compiled",
                   drop_remainder=True, shard=False):
     """method: centralized | fl | sl_{ac,am} | sflv{1,2,3}_{ac,am}.
 
@@ -18,11 +18,14 @@ def make_strategy(method: str, adapter, opt_factory, n_clients,
     method, cut-layer noise for the SL/SFL family, and pairwise-mask
     secure aggregation for FL.
 
-    ``engine`` selects the execution path: ``"stepwise"`` (legacy, one
-    jitted dispatch per mini-batch — the parity reference) or
-    ``"compiled"`` (repro.core.strategies.engine: whole epochs as single
-    XLA programs, scan-over-batches / vmap-over-hospitals).  Both are
-    numerically equivalent to 1e-5 (tests/test_engine.py).
+    ``engine`` selects the execution path: ``"compiled"`` (the default;
+    repro.core.strategies.engine: whole epochs — and whole multi-epoch
+    ``Strategy.run``s — as single XLA programs, scan-over-batches /
+    scan-over-rounds / vmap-over-hospitals) or ``"stepwise"`` (legacy,
+    one jitted dispatch per mini-batch — kept as the parity oracle).
+    Both are numerically equivalent to 1e-5 (tests/test_engine.py);
+    transport byte accounting and simulated wire timelines are identical
+    under either engine (``wire.simulator.timeline_from_accounting``).
     ``drop_remainder=False`` keeps the final short batch of each hospital
     (pad-and-mask on the compiled path).  ``shard=True`` places the
     hospital axis across local devices where possible (no-op on one

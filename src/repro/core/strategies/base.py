@@ -14,11 +14,12 @@ through hospital i's own client segment(s); FL/centralized have one model.
 Two execution engines share the SAME pure step functions (``full_step_fn``
 / ``split_step_fn`` / ``sflv3_step_fn``):
 
-  * ``stepwise`` (legacy, the parity reference): a Python host loop
+  * ``compiled`` (the DEFAULT; repro.core.strategies.engine): whole epochs
+    — and whole multi-epoch runs via ``Strategy.run`` — lowered to single
+    XLA programs: ``lax.scan`` over batches (and rounds), ``vmap`` over
+    the hospital axis where semantics allow.
+  * ``stepwise`` (legacy; kept as the parity oracle): a Python host loop
     dispatching one jitted step per mini-batch.
-  * ``compiled`` (repro.core.strategies.engine): whole epochs lowered to
-    single XLA programs — ``lax.scan`` over batches, ``vmap`` over the
-    hospital axis where semantics allow.
 
 Because both engines trace the identical step math, they agree to float32
 round-off (asserted at 1e-5 in tests/test_engine.py).
@@ -98,7 +99,7 @@ class Strategy:
     shared_eval_params: bool = False
 
     def __init__(self, adapter: SplitAdapter, opt_factory: Callable[[], O.Optimizer],
-                 n_clients: int, privacy=None, engine: str = "stepwise",
+                 n_clients: int, privacy=None, engine: str = "compiled",
                  drop_remainder: bool = True, shard: bool = False):
         if engine not in ("stepwise", "compiled"):
             raise ValueError(f"unknown engine {engine!r}")
@@ -127,6 +128,41 @@ class Strategy:
     def params_for_eval(self, state, client_idx) -> dict:
         """Full param dict (all segments) used to score client ``client_idx``."""
         raise NotImplementedError
+
+    # -- whole-run training ----------------------------------------------------
+    @property
+    def _whole_run(self) -> bool:
+        """Strategy supports lowering a multi-epoch run into ONE program."""
+        return False
+
+    def _run_compiled(self, state, client_data, rng, batch_size, n_epochs):
+        raise NotImplementedError
+
+    def run(self, state, client_data, rng, batch_size, n_epochs):
+        """Train ``n_epochs`` epochs/rounds; returns ``(state, logs)`` with
+        one ``EpochLog`` per epoch.
+
+        Under the compiled engine the WHOLE run lowers into a single XLA
+        program — an outer scan over rounds wrapping the epoch body, with
+        the FedAvg aggregation / SFLv2 client averaging folded in — so one
+        host dispatch executes every epoch.  Strategies that cannot fold
+        their round boundary in-graph (secure aggregation's host-side
+        masked uploads) and the stepwise engine fall back to a per-epoch
+        loop; both orders consume ``rng`` and the PRNG step counter
+        identically, so results match the fused path to float round-off.
+        """
+        if n_epochs <= 0:
+            return state, []
+        if self.engine == "compiled" and self._whole_run:
+            out = self._run_compiled(state, client_data, rng, batch_size,
+                                     n_epochs)
+            if out is not None:          # None: degenerate run, fall back
+                return out
+        logs = []
+        for _ in range(n_epochs):
+            state, log = self.run_epoch(state, client_data, rng, batch_size)
+            logs.append(log)
+        return state, logs
 
     # -- privacy plumbing -----------------------------------------------------
     @property

@@ -66,5 +66,40 @@ class Centralized(Strategy):
             self._dp_account(ci, packed.n_samples[0], batch_size, count=nb)
         return state, EpochLog(flat, nb, weights=packed.step_examples[0])
 
+    @property
+    def _whole_run(self):
+        return True
+
+    def _run_compiled(self, state, client_data, rng, batch_size, n_epochs):
+        from repro.core.strategies import engine as ENG
+        pooled = {k: np.concatenate([d[k] for d in client_data])
+                  for k in client_data[0]}
+        if ENG.empty_run([pooled], batch_size, self.drop_remainder):
+            return None
+        batches, packed = ENG.pack_run([pooled], batch_size, rng, n_epochs,
+                                       self.drop_remainder)
+        nb = packed.n_batches[0]
+        if not hasattr(self, "_run_c"):
+            self._run_c = ENG.make_seq_run(self.adapter, self._opt,
+                                           self.privacy)
+        key_idx = np.zeros((n_epochs, packed.nb_max), np.uint32)
+        if self._keyed:
+            for e in range(n_epochs):
+                key_idx[e, :nb] = self._take_key_indices(nb)
+        batches = {k: v[:, 0] for k, v in batches.items()}    # [E, NB, ...]
+        ex_w = None if packed.ex_weights is None else packed.ex_weights[0]
+        state["params"], state["opt"], losses = self._run_c(
+            state["params"], state["opt"], batches, packed.mask[0], ex_w,
+            key_idx, self._privacy_base_key())
+        self._run_calls = getattr(self, "_run_calls", 0) + 1
+        losses = np.asarray(losses)
+        logs = [EpochLog([float(x) for x in losses[e, :nb]], nb,
+                         weights=packed.step_examples[0])
+                for e in range(n_epochs)]
+        for ci in range(self.n_clients):
+            self._dp_account(ci, packed.n_samples[0], batch_size,
+                             count=nb * n_epochs)
+        return state, logs
+
     def params_for_eval(self, state, client_idx):
         return state["params"]

@@ -3,8 +3,9 @@
 The stepwise engine (the legacy path in each strategy, kept as the parity
 reference) dispatches one jitted step per mini-batch per hospital from a
 Python host loop — wall-clock is dominated by dispatch overhead and
-hospitals run strictly sequentially.  This module lowers a WHOLE epoch into
-a single XLA program instead:
+hospitals run strictly sequentially.  This module lowers a WHOLE epoch —
+and, via the ``make_*_run`` builders, a whole multi-epoch training RUN —
+into a single XLA program instead:
 
   * **pad-and-mask layout** — each hospital's shuffled epoch is packed into
     rectangular ``[n_clients, n_batches, batch, ...]`` arrays plus a
@@ -25,6 +26,16 @@ a single XLA program instead:
     reserves the same running counter (``Strategy._take_key_indices``) and
     the scan body folds the reserved index in, so DP-SGD / cut-layer noise
     draws are bit-identical across engines.
+  * **scan over rounds** (``make_fl_run`` / ``make_seq_run`` /
+    ``make_interleaved_run`` / ``make_sflv3_run``): an outer ``lax.scan``
+    over the epoch axis of ``pack_run``'s ``[n_epochs, ...]`` batch stack
+    wraps the epoch body, with the FedAvg weighted aggregation (secagg
+    off) and the SFLv2/v1 client-segment averaging folded into the round
+    body — a whole ``Strategy.run(n_epochs)`` becomes ONE host dispatch,
+    and per-round losses come back stacked ``[n_epochs, ...]`` for the
+    per-round ``EpochLog``s.  Per-round key-index grids keep consuming the
+    same running counter, epoch-major, so keyed draws stay bit-identical
+    to a stepwise multi-epoch loop.
 
 Every scan body calls the SAME pure step functions
 (``repro.core.strategies.base.{full,split,sflv3}_step_fn``) the stepwise
@@ -81,6 +92,15 @@ class PackedEpoch:
         return int(sum(self.n_batches))
 
 
+def _client_batch_count(n: int, batch_size: int,
+                        drop_remainder: bool) -> tuple[int, int, int]:
+    """``(nb, nb_full, rem)`` for one hospital of ``n`` samples — THE
+    batching rule (mirroring ``np_batches``), shared by ``pack_epoch``
+    and ``empty_run`` so the two can never drift."""
+    nb_full, rem = divmod(n, batch_size)
+    return nb_full + (1 if rem and not drop_remainder else 0), nb_full, rem
+
+
 def pack_epoch(client_data: list, batch_size: int,
                rng: np.random.Generator | None,
                drop_remainder: bool = True) -> PackedEpoch:
@@ -96,8 +116,8 @@ def pack_epoch(client_data: list, batch_size: int,
         idx = np.arange(n)
         if rng is not None:
             rng.shuffle(idx)
-        nb_full, rem = divmod(n, batch_size)
-        nb = nb_full + (1 if rem and not drop_remainder else 0)
+        nb, nb_full, rem = _client_batch_count(n, batch_size,
+                                               drop_remainder)
         order.append(idx)
         n_batches.append(nb)
         n_samples.append(n)
@@ -161,15 +181,10 @@ def _step_key(base_key, idx, keyed):
     return step_key(base_key, idx)
 
 
-def make_fl_epoch(adapter: SplitAdapter, opt: O.Optimizer, privacy=None):
-    """FL round as vmap-over-hospitals of scan-over-batches.
-
-    Every hospital starts from the broadcast global params with a fresh
-    optimizer (FedAvg semantics); masked steps are no-ops via
-    ``tree_select`` so the Adam step counter never advances on padding.
-    Returns ``epoch(global_params, batches, mask, ex_w, key_idx, base_key)
-    -> (stacked local params, [C, NB] losses)``.
-    """
+def _fl_epoch_body(adapter: SplitAdapter, opt: O.Optimizer, privacy=None):
+    """Traceable FL round: vmap-over-hospitals of scan-over-batches.
+    Shared verbatim by ``make_fl_epoch`` and ``make_fl_run``'s round scan
+    — one definition is what keeps the two numerically identical."""
     step, keyed = full_step_fn(adapter, opt, privacy)
 
     def epoch(global_params, batches, mask, ex_w, key_idx, base_key):
@@ -188,14 +203,24 @@ def make_fl_epoch(adapter: SplitAdapter, opt: O.Optimizer, privacy=None):
 
         return jax.vmap(per_client)(batches, mask, ex_w, key_idx)
 
-    return jax.jit(epoch)
+    return epoch
 
 
-def make_seq_epoch(adapter: SplitAdapter, opt: O.Optimizer, privacy=None):
-    """Centralized epoch as a single scan-over-batches (one 'hospital',
-    persistent optimizer state).  Returns ``epoch(params, opt_state,
-    batches, mask, ex_w, key_idx, base_key) -> (params, opt_state,
-    [NB] losses)``."""
+def make_fl_epoch(adapter: SplitAdapter, opt: O.Optimizer, privacy=None):
+    """FL round as vmap-over-hospitals of scan-over-batches.
+
+    Every hospital starts from the broadcast global params with a fresh
+    optimizer (FedAvg semantics); masked steps are no-ops via
+    ``tree_select`` so the Adam step counter never advances on padding.
+    Returns ``epoch(global_params, batches, mask, ex_w, key_idx, base_key)
+    -> (stacked local params, [C, NB] losses)``.
+    """
+    return jax.jit(_fl_epoch_body(adapter, opt, privacy))
+
+
+def _seq_epoch_body(adapter: SplitAdapter, opt: O.Optimizer, privacy=None):
+    """Traceable centralized epoch: one scan-over-batches with persistent
+    optimizer state; shared by ``make_seq_epoch`` and ``make_seq_run``."""
     step, keyed = full_step_fn(adapter, opt, privacy)
 
     def epoch(params, opt_state, batches, mask, ex_w, key_idx, base_key):
@@ -210,21 +235,22 @@ def make_seq_epoch(adapter: SplitAdapter, opt: O.Optimizer, privacy=None):
             body, (params, opt_state), (batches, mask, ex_w, key_idx))
         return params, opt_state, losses
 
-    return jax.jit(epoch)
+    return epoch
 
 
-def make_interleaved_epoch(adapter: SplitAdapter, opt_client: O.Optimizer,
-                           opt_server: O.Optimizer, transport=None,
-                           privacy=None):
-    """SL/SFLv2 epoch as ONE scan over the dense schedule array.
+def make_seq_epoch(adapter: SplitAdapter, opt: O.Optimizer, privacy=None):
+    """Centralized epoch as a single scan-over-batches (one 'hospital',
+    persistent optimizer state).  Returns ``epoch(params, opt_state,
+    batches, mask, ex_w, key_idx, base_key) -> (params, opt_state,
+    [NB] losses)``."""
+    return jax.jit(_seq_epoch_body(adapter, opt, privacy))
 
-    The shared server segment forces sequential semantics: each scan step
-    gathers client ``c``'s segment + optimizer slice from the stacked
-    hospital axis, runs the exact split step, and scatters the update back.
-    Returns ``epoch(stacked_clients, server, stacked_c_opts, s_opt,
-    batches, ex_w, sched, key_idx, base_key) -> (stacked_clients, server,
-    stacked_c_opts, s_opt, [steps] losses)``.
-    """
+
+def _interleaved_epoch_body(adapter: SplitAdapter, opt_client: O.Optimizer,
+                            opt_server: O.Optimizer, transport=None,
+                            privacy=None):
+    """Traceable SL/SFLv2 epoch: ONE scan over the dense schedule array;
+    shared by ``make_interleaved_epoch`` and ``make_interleaved_run``."""
     step, keyed = split_step_fn(adapter, opt_client, opt_server, transport,
                                 privacy)
 
@@ -246,17 +272,31 @@ def make_interleaved_epoch(adapter: SplitAdapter, opt_client: O.Optimizer,
             (sched, key_idx))
         return (*carry, losses)
 
-    return jax.jit(epoch)
+    return epoch
 
 
-def make_sflv3_epoch(adapter: SplitAdapter, opt_client: O.Optimizer,
-                     opt_server: O.Optimizer, n_clients: int, transport=None,
-                     privacy=None):
-    """SplitFedv3 epoch: scan over synchronous steps, vmap over hospitals
-    inside each step (the step fn already vmaps), with the wrap-around
-    batch index precomputed as a dense ``[steps, n_clients]`` array.
-    Returns ``epoch(stacked_clients, server, c_opt, s_opt, batches, b_idx,
-    key_idx, base_key) -> (..., [steps, C] losses)``."""
+def make_interleaved_epoch(adapter: SplitAdapter, opt_client: O.Optimizer,
+                           opt_server: O.Optimizer, transport=None,
+                           privacy=None):
+    """SL/SFLv2 epoch as ONE scan over the dense schedule array.
+
+    The shared server segment forces sequential semantics: each scan step
+    gathers client ``c``'s segment + optimizer slice from the stacked
+    hospital axis, runs the exact split step, and scatters the update back.
+    Returns ``epoch(stacked_clients, server, stacked_c_opts, s_opt,
+    batches, ex_w, sched, key_idx, base_key) -> (stacked_clients, server,
+    stacked_c_opts, s_opt, [steps] losses)``.
+    """
+    return jax.jit(_interleaved_epoch_body(adapter, opt_client, opt_server,
+                                           transport, privacy))
+
+
+def _sflv3_epoch_body(adapter: SplitAdapter, opt_client: O.Optimizer,
+                      opt_server: O.Optimizer, n_clients: int,
+                      transport=None, privacy=None):
+    """Traceable SplitFedv3/v1 epoch: scan over synchronous steps with the
+    vmapped per-client step inside; shared by ``make_sflv3_epoch`` and
+    ``make_sflv3_run``."""
     step, keyed = sflv3_step_fn(adapter, opt_client, opt_server, n_clients,
                                 transport, privacy)
 
@@ -275,7 +315,38 @@ def make_sflv3_epoch(adapter: SplitAdapter, opt_client: O.Optimizer,
             body, (stacked_clients, server, c_opt, s_opt), (b_idx, key_idx))
         return (*carry, losses)
 
-    return jax.jit(epoch)
+    return epoch
+
+
+def make_sflv3_epoch(adapter: SplitAdapter, opt_client: O.Optimizer,
+                     opt_server: O.Optimizer, n_clients: int, transport=None,
+                     privacy=None):
+    """SplitFedv3 epoch: scan over synchronous steps, vmap over hospitals
+    inside each step (the step fn already vmaps), with the wrap-around
+    batch index precomputed as a dense ``[steps, n_clients]`` array.
+    Returns ``epoch(stacked_clients, server, c_opt, s_opt, batches, b_idx,
+    key_idx, base_key) -> (..., [steps, C] losses)``."""
+    return jax.jit(_sflv3_epoch_body(adapter, opt_client, opt_server,
+                                     n_clients, transport, privacy))
+
+
+def _weighted_mean(stacked, w):
+    """Normalized-weight mean over the leading hospital axis (traceable —
+    shared by the jitted host-callable below and the in-scan FedAvg of
+    ``make_fl_run``)."""
+    def leaf(x):
+        wx = w.reshape((-1,) + (1,) * (x.ndim - 1))
+        return (x.astype(jnp.float32) * wx).sum(axis=0).astype(x.dtype)
+
+    return jax.tree.map(leaf, stacked)
+
+
+def _mean_sync(stacked):
+    """SFLv2-style client sync (traceable): every hospital gets the mean
+    of all client segments."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x.mean(axis=0, keepdims=True), x.shape),
+        stacked)
 
 
 @jax.jit
@@ -285,21 +356,158 @@ def stacked_weighted_mean(stacked, weights):
     trees (host-side aggregation cost grows with n_clients x n_leaves
     and was dwarfing the compiled epoch itself)."""
     w = weights.astype(jnp.float32) / weights.astype(jnp.float32).sum()
-
-    def leaf(x):
-        wx = w.reshape((-1,) + (1,) * (x.ndim - 1))
-        return (x.astype(jnp.float32) * wx).sum(axis=0).astype(x.dtype)
-
-    return jax.tree.map(leaf, stacked)
+    return _weighted_mean(stacked, w)
 
 
 @jax.jit
 def stacked_mean_sync(stacked):
     """SFLv2-style client synchronization on the stacked hospital axis:
     every hospital gets the mean of all client segments."""
-    return jax.tree.map(
-        lambda x: jnp.broadcast_to(x.mean(axis=0, keepdims=True), x.shape),
-        stacked)
+    return _mean_sync(stacked)
+
+
+# ---------------------------------------------------------------------------
+# whole-run kernels — scan over rounds around the epoch bodies above
+# ---------------------------------------------------------------------------
+
+def empty_run(client_data, batch_size: int,
+              drop_remainder: bool = True) -> bool:
+    """True when no hospital yields a single batch.  Checked BEFORE
+    ``pack_run`` so a degenerate ``Strategy.run`` can fall back to the
+    per-epoch path without having consumed any shuffle draws from the
+    host rng."""
+    for d in client_data:
+        n = len(next(iter(d.values())))
+        if _client_batch_count(n, batch_size, drop_remainder)[0]:
+            return False
+    return True
+
+
+def pack_run(client_data, batch_size: int, rng, n_epochs: int,
+             drop_remainder: bool = True):
+    """Pack ``n_epochs`` epochs into ``[n_epochs, n_clients, nb_max, ...]``.
+
+    Consumes ``rng`` exactly as a stepwise loop of per-epoch packs would
+    (epoch-major, hospital order inside each epoch), so both engines train
+    on identical batch compositions.  Batch counts, masks and per-example
+    weights are epoch-invariant (data sizes never change mid-run) — only
+    the shuffles differ — so the returned ``PackedEpoch`` meta is the
+    first epoch's.  Memory grows linearly with ``n_epochs`` (the whole
+    run's batch grid lives in one buffer); callers with huge runs can
+    chunk ``run`` into several calls.
+    """
+    packs = [pack_epoch(client_data, batch_size, rng, drop_remainder)
+             for _ in range(n_epochs)]
+    batches = {k: np.stack([p.batches[k] for p in packs])
+               for k in packs[0].batches}
+    return batches, packs[0]
+
+
+def make_fl_run(adapter: SplitAdapter, opt: O.Optimizer, privacy=None):
+    """Whole FL training run as ONE program: ``lax.scan`` over rounds, each
+    round the SAME vmap-over-hospitals scan-over-batches body
+    ``make_fl_epoch`` jits, followed by the in-graph data-size-weighted
+    FedAvg aggregation.  (Secure aggregation needs host-side per-client
+    masked uploads and keeps the per-round path.)  Returns
+    ``run(global_params, batches[E,C,NB,...], mask, ex_w, key_idx[E,C,NB],
+    base_key, agg_weights[C]) -> (params, [E,C,NB] losses)``.
+    """
+    epoch = _fl_epoch_body(adapter, opt, privacy)
+
+    def run(global_params, batches, mask, ex_w, key_idx, base_key, agg_w):
+        w = agg_w.astype(jnp.float32) / agg_w.astype(jnp.float32).sum()
+
+        def round_body(gp, xs):
+            b_e, ki_e = xs
+            stacked, losses = epoch(gp, b_e, mask, ex_w, ki_e, base_key)
+            return _weighted_mean(stacked, w), losses
+
+        return jax.lax.scan(round_body, global_params, (batches, key_idx))
+
+    return jax.jit(run)
+
+
+def make_seq_run(adapter: SplitAdapter, opt: O.Optimizer, privacy=None):
+    """Whole centralized run: scan over epochs around ``make_seq_epoch``'s
+    scan-over-batches body (persistent optimizer state across epochs).
+    Returns ``run(params, opt_state, batches[E,NB,...], mask[NB], ex_w,
+    key_idx[E,NB], base_key) -> (params, opt_state, [E,NB] losses)``."""
+    epoch = _seq_epoch_body(adapter, opt, privacy)
+
+    def run(params, opt_state, batches, mask, ex_w, key_idx, base_key):
+        def round_body(carry, xs):
+            b_e, ki_e = xs
+            p, s, losses = epoch(*carry, b_e, mask, ex_w, ki_e, base_key)
+            return (p, s), losses
+
+        (params, opt_state), losses = jax.lax.scan(
+            round_body, (params, opt_state), (batches, key_idx))
+        return params, opt_state, losses
+
+    return jax.jit(run)
+
+
+def make_interleaved_run(adapter: SplitAdapter, opt_client: O.Optimizer,
+                         opt_server: O.Optimizer, transport=None,
+                         privacy=None, sync_clients: bool = False):
+    """Whole SL/SFLv2 run: scan over epochs around the scanned schedule
+    interleave body ``make_interleaved_epoch`` jits.  ``sync_clients``
+    folds the SFLv2 end-of-epoch client fed-averaging into the round
+    body.  The schedule array is epoch-invariant (batch counts never
+    change) and is rescanned each round; per-epoch key indices arrive as
+    ``key_idx[E, steps]``.  Returns ``run(stacked_clients, server,
+    stacked_c_opts, s_opt, batches[E,C,NB,...], ex_w, sched, key_idx,
+    base_key) -> (..., [E, steps] losses)``.
+    """
+    epoch = _interleaved_epoch_body(adapter, opt_client, opt_server,
+                                    transport, privacy)
+
+    def run(stacked_clients, server, stacked_c_opts, s_opt, batches, ex_w,
+            sched, key_idx, base_key):
+        def round_body(carry, xs):
+            b_e, ki_e = xs
+            sc, sp, co, so, losses = epoch(*carry, b_e, ex_w, sched, ki_e,
+                                           base_key)
+            if sync_clients:
+                sc = _mean_sync(sc)
+            return (sc, sp, co, so), losses
+
+        carry, losses = jax.lax.scan(
+            round_body, (stacked_clients, server, stacked_c_opts, s_opt),
+            (batches, key_idx))
+        return (*carry, losses)
+
+    return jax.jit(run)
+
+
+def make_sflv3_run(adapter: SplitAdapter, opt_client: O.Optimizer,
+                   opt_server: O.Optimizer, n_clients: int, transport=None,
+                   privacy=None, sync_clients: bool = False):
+    """Whole SplitFedv3/v1 run: scan over epochs around the synchronous-
+    step scan body ``make_sflv3_epoch`` jits (wrap-around index grid
+    ``b_idx`` is epoch-invariant); ``sync_clients`` folds SFLv1's client
+    fed-averaging into the round body.  Returns ``run(stacked_clients,
+    server, c_opt, s_opt, batches[E,C,NB,...], b_idx, key_idx[E,steps],
+    base_key) -> (..., [E, steps, C] losses)``."""
+    epoch = _sflv3_epoch_body(adapter, opt_client, opt_server, n_clients,
+                              transport, privacy)
+
+    def run(stacked_clients, server, c_opt, s_opt, batches, b_idx, key_idx,
+            base_key):
+        def round_body(carry, xs):
+            b_e, ki_e = xs
+            sc, sp, co, so, losses = epoch(*carry, b_e, b_idx, ki_e,
+                                           base_key)
+            if sync_clients:
+                sc = _mean_sync(sc)
+            return (sc, sp, co, so), losses
+
+        carry, losses = jax.lax.scan(
+            round_body, (stacked_clients, server, c_opt, s_opt),
+            (batches, key_idx))
+        return (*carry, losses)
+
+    return jax.jit(run)
 
 
 # ---------------------------------------------------------------------------

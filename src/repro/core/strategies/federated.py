@@ -14,7 +14,11 @@ bytes are metered.
 
 Local epochs are independent across hospitals, so the compiled engine runs
 the whole round as ONE program: ``vmap`` over the hospital axis of a
-``lax.scan`` over each hospital's padded batch grid.
+``lax.scan`` over each hospital's padded batch grid.  A multi-round
+``run(n_epochs)`` goes further and folds the weighted FedAvg aggregation
+into an outer scan over rounds — the whole training run is one XLA call.
+Secure aggregation keeps the per-round path: its masked uploads are a
+host-side protocol and cannot be fused into the program.
 """
 
 from __future__ import annotations
@@ -112,6 +116,40 @@ class FedAvg(Strategy):
                                  count=nb)
         return state, EpochLog(flat, len(flat), weights=loss_w,
                                client_steps=list(packed.n_batches))
+
+    @property
+    def _whole_run(self):
+        # secagg aggregates host-side per-round (masked uploads) and keeps
+        # the per-epoch dispatch path
+        return not (self.privacy is not None and self.privacy.secagg)
+
+    def _run_compiled(self, state, client_data, rng, batch_size, n_epochs):
+        from repro.core.strategies import engine as ENG
+        if ENG.empty_run(client_data, batch_size, self.drop_remainder):
+            return None                        # empty run: per-epoch path
+        batches, packed = ENG.pack_run(client_data, batch_size, rng,
+                                       n_epochs, self.drop_remainder)
+        if not hasattr(self, "_run_c"):
+            self._run_c = ENG.make_fl_run(self.adapter, self._opt,
+                                          self.privacy)
+        key_idx = np.stack([ENG.key_index_grid(self, packed)
+                            for _ in range(n_epochs)])
+        state["params"], losses = self._run_c(
+            state["params"], batches, packed.mask, packed.ex_weights,
+            key_idx, self._privacy_base_key(),
+            np.asarray(packed.n_samples, np.float32))
+        self._run_calls = getattr(self, "_run_calls", 0) + 1
+        losses = np.asarray(losses)
+        logs = []
+        for e in range(n_epochs):
+            flat, loss_w = ENG.client_major_log(losses[e], packed)
+            logs.append(EpochLog(flat, len(flat), weights=loss_w,
+                                 client_steps=list(packed.n_batches)))
+        for ci, nb in enumerate(packed.n_batches):
+            if nb:
+                self._dp_account(ci, packed.n_samples[ci], batch_size,
+                                 count=nb * n_epochs)
+        return state, logs
 
     def params_for_eval(self, state, client_idx):
         return state["params"]

@@ -23,6 +23,7 @@ from repro.core.strategies.base import (Strategy, EpochLog, make_split_step,
 
 class SplitLearning(Strategy):
     name = "sl"
+    _sync_stacked = False     # SFLv2/v1 fold client averaging into the run
 
     def __init__(self, adapter, opt_factory, n_clients, schedule="ac",
                  transport=None, privacy=None, **kw):
@@ -81,6 +82,10 @@ class SplitLearning(Strategy):
             self._dp_account(c, len(client_data[c]["label"]), batch_size)
             if self.transport is not None:
                 self.transport.account(self.adapter, batches[c][b])
+        if order:
+            self._record_wire_epoch(
+                next(bs[0] for bs in batches if bs),
+                [len(b) for b in batches])
         self._end_of_epoch(state)
         return state, EpochLog(losses, len(losses), weights=loss_w,
                                client_steps=client_steps)
@@ -121,18 +126,73 @@ class SplitLearning(Strategy):
         return state, EpochLog(flat, len(flat), weights=loss_w,
                                client_steps=list(packed.n_batches))
 
-    def _account_compiled(self, packed, batch_size):
-        """Analytic per-epoch accounting for the compiled path: the DP
-        accountant composes each hospital's step count in one call, and
-        the transport meters the full-batch boundary shapes once per valid
-        step (padded remainder batches are metered at the padded shape)."""
+    @property
+    def _whole_run(self):
+        return True
+
+    def _run_compiled(self, state, client_data, rng, batch_size, n_epochs):
+        from repro.core.strategies import engine as ENG
+        if ENG.empty_run(client_data, batch_size, self.drop_remainder):
+            return None                        # empty run: per-epoch path
+        batches, packed = ENG.pack_run(client_data, batch_size, rng,
+                                       n_epochs, self.drop_remainder)
+        sched = schedule_array(self.schedule, packed.n_batches)
+        if not hasattr(self, "_run_c"):
+            self._run_c = ENG.make_interleaved_run(
+                self.adapter, self._opt_c, self._opt_s, self.transport,
+                self.privacy, sync_clients=self._sync_stacked)
+        key_idx = np.stack([
+            self._take_key_indices(len(sched)) if self._keyed
+            else np.zeros((len(sched),), np.uint32)
+            for _ in range(n_epochs)])
+        self._ensure_stacked(state)
+        (state["stacked_clients"], state["server"],
+         state["stacked_c_opts"], state["s_opt"], losses) = self._run_c(
+            state["stacked_clients"], state["server"],
+            state["stacked_c_opts"], state["s_opt"], batches,
+            packed.ex_weights, sched, key_idx, self._privacy_base_key())
+        self._run_calls = getattr(self, "_run_calls", 0) + 1
+        losses = np.asarray(losses)
+        logs = []
+        for e in range(n_epochs):
+            flat, loss_w = ENG.scheduled_log(losses[e], sched, packed)
+            logs.append(EpochLog(flat, len(flat), weights=loss_w,
+                                 client_steps=list(packed.n_batches)))
+        self._account_compiled(packed, batch_size, n_epochs)
+        return state, logs
+
+    def _account_compiled(self, packed, batch_size, n_epochs=1):
+        """Analytic accounting for the compiled path: the DP accountant
+        composes each hospital's step count in one call, and the transport
+        meters each step at its TRUE batch shape — full batches in one
+        ``count=`` call, a kept remainder batch (``drop_remainder=False``)
+        at its short shape, exactly the bytes the stepwise per-step path
+        meters — times ``n_epochs`` for a whole-run program."""
         example = {k: v[0, 0] for k, v in packed.batches.items()}
         for c, nb in enumerate(packed.n_batches):
             if not nb:
                 continue
-            self._dp_account(c, packed.n_samples[c], batch_size, count=nb)
+            self._dp_account(c, packed.n_samples[c], batch_size,
+                             count=nb * n_epochs)
             if self.transport is not None:
-                self.transport.account(self.adapter, example, count=nb)
+                for m, n_steps in zip(*np.unique(packed.step_examples[c],
+                                                 return_counts=True)):
+                    b = (example if m == packed.batch_size
+                         else {k: v[:m] for k, v in example.items()})
+                    self.transport.account(self.adapter, b,
+                                           count=int(n_steps) * n_epochs)
+        for _ in range(n_epochs):
+            self._record_wire_epoch(example, packed.n_batches)
+
+    def _record_wire_epoch(self, example_batch, n_batches):
+        """The analytic->timeline bridge hook: hand the transport this
+        epoch's schedule signature so ``wire.simulator`` can expand the
+        summary accounting back into per-step timelines."""
+        if self.transport is None or not sum(n_batches):
+            return
+        self.transport.record_epoch(self.adapter, example_batch,
+                                    self.name.rsplit("_", 1)[0],
+                                    self.schedule, n_batches)
 
     def _end_of_epoch(self, state):
         pass

@@ -35,6 +35,8 @@ from repro.core.strategies.split import SplitLearning
 class SplitFedV2(SplitLearning):
     """Sequential server training + end-of-epoch client averaging."""
 
+    _sync_stacked = True      # fold the client averaging into the run scan
+
     def __init__(self, adapter, opt_factory, n_clients, schedule="ac",
                  transport=None, privacy=None, **kw):
         super().__init__(adapter, opt_factory, n_clients, schedule,
@@ -124,6 +126,7 @@ class SplitFedV3(SplitLearning):
                 for c in range(self.n_clients):
                     self.transport.account(self.adapter,
                                            batches[c][s % len(batches[c])])
+        self._record_wire_epoch(batches[0][0], [len(b) for b in batches])
         self._end_of_epoch(state)
         return state, EpochLog(losses, steps,
                                client_steps=[steps] * self.n_clients)
@@ -150,17 +153,58 @@ class SplitFedV3(SplitLearning):
             sc, state["server"], state["c_opt"], state["s_opt"], batches,
             b_idx, key_idx, self._privacy_base_key())
         flat = np.asarray(losses).reshape(-1).tolist()
-        example = {k: v[0, 0] for k, v in packed.batches.items()}
-        for c in range(self.n_clients):
-            # wrap-around resampling included: every client is touched
-            # every step, so the analytic count is simply ``steps``
-            self._dp_account(c, packed.n_samples[c], batch_size,
-                             count=steps)
-            if self.transport is not None:
-                self.transport.account(self.adapter, example, count=steps)
+        self._account_v3(packed, batch_size)
         self._end_of_epoch(state)
         return state, EpochLog(flat, steps,
                                client_steps=[steps] * self.n_clients)
+
+    def _account_v3(self, packed, batch_size, n_epochs=1):
+        """Analytic accounting: every client is touched every synchronous
+        step (wrap-around resampling included), so the per-epoch count is
+        simply ``steps = nb_max`` for DP and transport alike."""
+        steps = packed.nb_max
+        example = {k: v[0, 0] for k, v in packed.batches.items()}
+        for c in range(self.n_clients):
+            self._dp_account(c, packed.n_samples[c], batch_size,
+                             count=steps * n_epochs)
+            if self.transport is not None:
+                self.transport.account(self.adapter, example,
+                                       count=steps * n_epochs)
+        for _ in range(n_epochs):
+            self._record_wire_epoch(example, packed.n_batches)
+
+    @property
+    def _whole_run(self):
+        return True
+
+    def _run_compiled(self, state, client_data, rng, batch_size, n_epochs):
+        from repro.core.strategies import engine as ENG
+        batches, packed = ENG.pack_run(client_data, batch_size, rng,
+                                       n_epochs, True)
+        self._check_batches(packed.n_batches, batch_size)
+        steps = packed.nb_max
+        if not hasattr(self, "_run3_c"):
+            self._run3_c = ENG.make_sflv3_run(
+                self.adapter, self._opt_c, self._opt_s, self.n_clients,
+                self.transport, self.privacy,
+                sync_clients=self._sync_stacked)
+        b_idx = np.stack([[s % nb for nb in packed.n_batches]
+                          for s in range(steps)]).astype(np.int32)
+        key_idx = np.stack([
+            self._take_key_indices(steps) if self._keyed
+            else np.zeros((steps,), np.uint32) for _ in range(n_epochs)])
+        (state["stacked_clients"], state["server"], state["c_opt"],
+         state["s_opt"], losses) = self._run3_c(
+            state["stacked_clients"], state["server"], state["c_opt"],
+            state["s_opt"], batches, b_idx, key_idx,
+            self._privacy_base_key())
+        self._run_calls = getattr(self, "_run_calls", 0) + 1
+        losses = np.asarray(losses)
+        logs = [EpochLog(losses[e].reshape(-1).tolist(), steps,
+                         client_steps=[steps] * self.n_clients)
+                for e in range(n_epochs)]
+        self._account_v3(packed, batch_size, n_epochs)
+        return state, logs
 
     def _end_of_epoch(self, state):
         pass
@@ -176,6 +220,8 @@ class SplitFedV3(SplitLearning):
 
 class SplitFedV1(SplitFedV3):
     """Parallel server (like v3) + fed-averaged clients each round."""
+
+    _sync_stacked = True
 
     def __init__(self, adapter, opt_factory, n_clients, schedule="ac",
                  transport=None, privacy=None, **kw):

@@ -9,9 +9,13 @@ paper Table 4) into an operational layer:
                     with ``lan`` / ``hospital_wan`` / ``cellular`` presets.
   * ``simulator`` — event-driven replay of one epoch's transfer DAG:
                     per-method wall-clock, per-client timelines,
-                    straggler sensitivity.
+                    straggler sensitivity; ``timeline_from_accounting``
+                    expands a trained Transport's analytic per-epoch
+                    accounting back into the same per-step timelines.
   * ``transport`` — the training-time hook: strategies encode/decode the
-                    cut-layer tensors in-graph and meter real bytes.
+                    cut-layer tensors in-graph, meter real bytes, and
+                    record per-epoch schedule signatures for the
+                    analytic->timeline bridge.
 """
 
 from repro.wire.codec import (BF16Codec, CODECS, Codec, IdentityCodec,
@@ -20,14 +24,15 @@ from repro.wire.codec import (BF16Codec, CODECS, Codec, IdentityCodec,
 from repro.wire.network import SCENARIOS, NetworkModel, make_network
 from repro.wire.simulator import (SimResult, Transfer, WireEvent,
                                   build_transfers, replay, simulate,
-                                  straggler_sensitivity)
-from repro.wire.transport import Transport, boundary_error
+                                  straggler_sensitivity,
+                                  timeline_from_accounting)
+from repro.wire.transport import EpochSchedule, Transport, boundary_error
 
 __all__ = [
     "Codec", "IdentityCodec", "BF16Codec", "Int8Codec", "TopKCodec",
     "make_codec", "tree_roundtrip", "tree_wire_bytes", "CODECS",
     "NetworkModel", "SCENARIOS", "make_network",
     "Transfer", "WireEvent", "SimResult", "build_transfers", "replay",
-    "simulate", "straggler_sensitivity",
-    "Transport", "boundary_error",
+    "simulate", "straggler_sensitivity", "timeline_from_accounting",
+    "EpochSchedule", "Transport", "boundary_error",
 ]

@@ -9,9 +9,17 @@ the wire.  Lossy codecs backpropagate straight-through (see
 Byte accounting happens host-side from boundary SHAPES (the roundtrip
 itself never materializes a payload inside the jitted step): strategies
 call ``account`` once per training step and the transport accumulates
-exact on-wire and raw byte counters, cached per batch shape.  Evaluation
-paths are not accounted (and not compressed) — clients score with their
-own full-precision segments, matching the paper's eval protocol.
+exact on-wire and raw byte counters, cached per (adapter, batch shape).
+Evaluation paths are not accounted (and not compressed) — clients score
+with their own full-precision segments, matching the paper's eval
+protocol.
+
+``record_epoch`` is the analytic->timeline bridge hook: strategies hand
+the transport each trained epoch's schedule signature (method kind,
+interleaving schedule, per-client batch counts, per-leg byte sizes), and
+``repro.wire.simulator.timeline_from_accounting`` expands those summaries
+back into the exact per-step transfer DAG the event engine replays —
+identical whichever engine trained, per-step or analytic accounting.
 """
 
 from __future__ import annotations
@@ -25,12 +33,28 @@ from repro.wire.codec import Codec, make_codec, tree_roundtrip, \
     tree_wire_bytes
 
 
+@dataclasses.dataclass(frozen=True)
+class EpochSchedule:
+    """One trained epoch's schedule signature (recorded by
+    ``Transport.record_epoch``) — everything the wire simulator needs to
+    expand the epoch's analytic accounting back into per-step transfers:
+    the method kind, the client interleaving, per-client train batch
+    counts, and the per-leg on-wire/raw byte sizes (``core.comm.leg_sizes``
+    through this transport's codec)."""
+    kind: str                   # "sl" | "sflv2" | "sflv3" | "sflv1"
+    schedule: str               # "ac" | "am"
+    tr_counts: tuple            # per-client train batch counts
+    legs: dict                  # leg name -> bytes (act_fm, act_mt, ...)
+    nls: bool
+
+
 @dataclasses.dataclass
 class Transport:
     codec: Codec
     bytes_on_wire: float = 0.0
     bytes_raw: float = 0.0
     steps: int = 0
+    epoch_log: list = dataclasses.field(default_factory=list, repr=False)
     _cache: dict = dataclasses.field(default_factory=dict, repr=False)
 
     def __post_init__(self):
@@ -42,18 +66,30 @@ class Transport:
         return tree_roundtrip(self.codec, tree)
 
     # -- host-side accounting ------------------------------------------------
+    @staticmethod
+    def _shape_key(adapter, batch: dict):
+        """Cache key: batch shape signature PLUS the adapter itself.
+
+        Keying on shapes alone silently reused one adapter's boundary
+        sizes for another when a single ``Transport`` was shared across
+        adapters / cut points; the adapter (a frozen dataclass, hashable,
+        kept alive by the cache) pins the entry to its boundary.
+        """
+        return (adapter,
+                tuple(sorted((k, tuple(v.shape), str(v.dtype))
+                             for k, v in batch.items())))
+
     def account(self, adapter, batch: dict, train: bool = True,
                 count: int = 1):
         """Record ``count`` steps' boundary traffic (activations up + grads
         down per step).
 
-        Cached on the batch's shape signature, so per-step cost after the
-        first call is a dict lookup.  The compiled engine accounts a whole
-        epoch analytically in one call per hospital (``count=n_batches``)
-        instead of once per host-loop step.
+        Cached on the (adapter, batch shape) signature, so per-step cost
+        after the first call is a dict lookup.  The compiled engine
+        accounts a whole epoch (or whole run) analytically in one call per
+        hospital (``count=n_batches``) instead of once per host-loop step.
         """
-        key = tuple(sorted((k, tuple(v.shape), str(v.dtype))
-                           for k, v in batch.items()))
+        key = ("bytes", *self._shape_key(adapter, batch))
         if key not in self._cache:
             specs = adapter.boundary_specs(batch)
             from repro.core.partition import leaf_bytes
@@ -67,6 +103,24 @@ class Transport:
         self.bytes_raw += count * legs * raw
         self.steps += count
 
+    def record_epoch(self, adapter, example_batch: dict, kind: str,
+                     schedule: str, n_batches) -> None:
+        """Append one trained epoch's schedule signature to ``epoch_log``.
+
+        Called once per epoch by the SL/SFL strategies under BOTH engines
+        (the stepwise per-step path and the compiled analytic path record
+        identical signatures), which is what makes
+        ``simulator.timeline_from_accounting`` engine-independent.
+        """
+        key = ("legs", *self._shape_key(adapter, example_batch))
+        if key not in self._cache:
+            from repro.core.comm import leg_sizes
+            self._cache[key] = leg_sizes(adapter, example_batch,
+                                         codec=self.codec)
+        self.epoch_log.append(EpochSchedule(
+            kind, schedule, tuple(int(n) for n in n_batches),
+            self._cache[key], adapter.nls))
+
     @property
     def compression_ratio(self) -> float:
         if self.bytes_on_wire <= 0:
@@ -76,6 +130,7 @@ class Transport:
     def reset(self):
         self.bytes_on_wire = self.bytes_raw = 0.0
         self.steps = 0
+        self.epoch_log.clear()
 
     def summary(self) -> dict:
         return {"codec": self.codec.name, "steps": self.steps,

@@ -121,6 +121,136 @@ def test_parity_keep_remainder(method, tiny_setup):
 
 
 # ---------------------------------------------------------------------------
+# whole-run programs: Strategy.run(n_epochs) as ONE XLA call
+# ---------------------------------------------------------------------------
+
+RUN_METHODS = ["centralized", "fl", "sl_am", "sflv2_ac", "sflv3_ac"]
+
+
+def _whole_run(method, engine, clients, adapter, privacy=None, epochs=3,
+               batch=4, drop_remainder=True):
+    st = make_strategy(method, adapter, lambda: O.adam(1e-3), len(clients),
+                       privacy=privacy, engine=engine,
+                       drop_remainder=drop_remainder)
+    state = st.setup(jax.random.key(0))
+    state, logs = st.run(state, [c.train for c in clients],
+                         np.random.default_rng(0), batch, epochs)
+    return st, state, logs
+
+
+def _assert_run_parity(method, clients, adapter, privacy=None, epochs=3,
+                       atol=1e-5):
+    st_a, sa, la = _whole_run(method, "stepwise", clients, adapter, privacy,
+                              epochs)
+    st_b, sb, lb = _whole_run(method, "compiled", clients, adapter, privacy,
+                              epochs)
+    assert len(la) == len(lb) == epochs
+    for ea, eb in zip(la, lb):
+        assert len(ea.losses) == len(eb.losses)
+        np.testing.assert_allclose(ea.losses, eb.losses, atol=atol)
+        assert ea.client_steps == eb.client_steps
+        assert ea.weights == eb.weights
+    for i in range(len(clients)):
+        pa, pb = st_a.params_for_eval(sa, i), st_b.params_for_eval(sb, i)
+        for a, b in zip(jax.tree.leaves(pa), jax.tree.leaves(pb)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       atol=atol)
+    ra, rb = st_a.privacy_report(), st_b.privacy_report()
+    assert len(ra) == len(rb)
+    for x, y in zip(ra, rb):
+        assert x["steps"] == y["steps"]
+        assert abs(x["epsilon"] - y["epsilon"]) < 1e-9
+
+
+@pytest.mark.parametrize("method", RUN_METHODS)
+def test_run_parity_plain(method, tiny_setup):
+    """3-epoch whole-run program == stepwise epoch loop (<= 1e-5)."""
+    clients, adapter = tiny_setup
+    _assert_run_parity(method, clients, adapter)
+
+
+@pytest.mark.parametrize("method", ["fl", "sl_am", "sflv3_ac"])
+def test_run_parity_dp(method, tiny_setup):
+    clients, adapter = tiny_setup
+    _assert_run_parity(method, clients, adapter, privacy=DP, epochs=2)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method", ["centralized", "sl_ac", "sflv2_ac"])
+def test_run_parity_dp_full_grid(method, tiny_setup):
+    clients, adapter = tiny_setup
+    _assert_run_parity(method, clients, adapter, privacy=DP, epochs=2)
+
+
+def test_run_parity_cut_noise(tiny_setup):
+    clients, adapter = tiny_setup
+    _assert_run_parity("sl_ac", clients, adapter, privacy=CUT, epochs=2)
+
+
+@pytest.mark.parametrize("method", RUN_METHODS)
+def test_run_is_one_program(method, tiny_setup):
+    """A 3-epoch compiled run is ONE XLA dispatch: the whole-run program
+    is invoked exactly once, traced/compiled exactly once, and no
+    per-epoch program is ever built."""
+    clients, adapter = tiny_setup
+    st, _, logs = _whole_run(method, "compiled", clients, adapter)
+    assert len(logs) == 3
+    assert getattr(st, "_run_calls", 0) == 1
+    assert not hasattr(st, "_epoch_c"), "per-epoch program was dispatched"
+    run_fn = getattr(st, "_run_c", None) or getattr(st, "_run3_c", None)
+    assert run_fn is not None
+    if hasattr(run_fn, "_cache_size"):
+        assert run_fn._cache_size() == 1
+    # a second run reuses the same compiled program (no retrace)
+    st.run(st.setup(jax.random.key(1)), [c.train for c in clients],
+           np.random.default_rng(1), 4, 3)
+    assert st._run_calls == 2
+    if hasattr(run_fn, "_cache_size"):
+        assert run_fn._cache_size() == 1
+
+
+def test_run_secagg_falls_back_to_per_round(tiny_setup):
+    """Secagg's masked uploads are host-side: run() keeps per-epoch
+    dispatch but still matches the stepwise reference."""
+    clients, adapter = tiny_setup
+    priv = PrivacyConfig(secagg=True)
+    _assert_run_parity("fl", clients, adapter, privacy=priv, epochs=2)
+    st, _, _ = _whole_run("fl", "compiled", clients, adapter, privacy=priv,
+                          epochs=2)
+    assert getattr(st, "_run_calls", 0) == 0     # whole-run path not taken
+
+
+def test_run_empty_epochs(tiny_setup):
+    clients, adapter = tiny_setup
+    st = make_strategy("fl", adapter, lambda: O.adam(1e-3), len(clients))
+    state = st.setup(jax.random.key(0))
+    state, logs = st.run(state, [c.train for c in clients],
+                         np.random.default_rng(0), 4, 0)
+    assert logs == []
+
+
+@pytest.mark.parametrize("method", ["fl", "sl_am"])
+def test_run_keep_remainder_parity(method, tiny_setup):
+    """drop_remainder=False whole-run: stepwise short batches == compiled
+    pad-and-mask per-example weights, across every round."""
+    clients, adapter = tiny_setup
+    st_a, sa, la = _whole_run(method, "stepwise", clients, adapter,
+                              drop_remainder=False)
+    st_b, sb, lb = _whole_run(method, "compiled", clients, adapter,
+                              drop_remainder=False)
+    for ea, eb in zip(la, lb):
+        np.testing.assert_allclose(ea.losses, eb.losses, atol=1e-5)
+        assert ea.weights == eb.weights
+    for i in range(len(clients)):
+        for a, b in zip(jax.tree.leaves(st_a.params_for_eval(sa, i)),
+                        jax.tree.leaves(st_b.params_for_eval(sb, i))):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
 # np_batches remainder handling (satellite)
 # ---------------------------------------------------------------------------
 
@@ -229,14 +359,20 @@ def test_scores_all_matches_per_hospital(tiny_setup):
     assert 0.0 <= m["auroc"] <= 1.0
 
 
-def test_transport_accounting_compiled_matches_stepwise(tiny_setup):
+@pytest.mark.parametrize("drop_remainder", [True, False])
+def test_transport_accounting_compiled_matches_stepwise(drop_remainder,
+                                                        tiny_setup):
+    """Byte accounting is engine-independent — including kept remainder
+    batches, which the compiled path must meter at their TRUE short shape
+    rather than the padded full-batch shape."""
     from repro.wire import Transport
     clients, adapter = tiny_setup
     byt = {}
     for engine in ("stepwise", "compiled"):
         tp = Transport("identity")
         st = make_strategy("sl_am", adapter, lambda: O.adam(1e-3),
-                           len(clients), transport=tp, engine=engine)
+                           len(clients), transport=tp, engine=engine,
+                           drop_remainder=drop_remainder)
         state = st.setup(jax.random.key(0))
         st.run_epoch(state, [c.train for c in clients],
                      np.random.default_rng(0), 4)

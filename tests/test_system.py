@@ -44,10 +44,19 @@ def test_method_runs_and_evaluates(method, nls, tiny_setup):
     assert 0.0 <= m["auroc"] <= 1.0
 
 
+def _client_trees(state, first_last=(0, -1)):
+    """Client segment trees under either engine layout (stepwise keeps a
+    list, the default compiled engine keeps the hospital axis stacked)."""
+    if "stacked_clients" in state:
+        from repro.core.partition import tree_take
+        return [tree_take(state["stacked_clients"], i) for i in first_last]
+    return [state["clients"][i] for i in first_last]
+
+
 def test_sflv2_synchronizes_clients(tiny_setup):
     clients, cfg = tiny_setup
     st, state, _ = _run("sflv2_ac", False, clients, cfg)
-    c0, c1 = state["clients"][0], state["clients"][-1]
+    c0, c1 = _client_trees(state)
     for a, b in zip(jax.tree.leaves(c0), jax.tree.leaves(c1)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
@@ -55,7 +64,7 @@ def test_sflv2_synchronizes_clients(tiny_setup):
 def test_sl_keeps_clients_unique(tiny_setup):
     clients, cfg = tiny_setup
     st, state, _ = _run("sl_ac", False, clients, cfg)
-    c0, c1 = state["clients"][0], state["clients"][-1]
+    c0, c1 = _client_trees(state)
     diffs = [float(jnp.abs(a - b).max())
              for a, b in zip(jax.tree.leaves(c0), jax.tree.leaves(c1))]
     assert max(diffs) > 0

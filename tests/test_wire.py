@@ -16,7 +16,8 @@ from repro.kernels.act_compress.ref import (dequantize_ref, quantize_ref,
 from repro.models.cnn import DenseNetConfig, build_densenet
 from repro.wire import (NetworkModel, SCENARIOS, Transport, boundary_error,
                         build_transfers, make_codec, make_network, replay,
-                        simulate, straggler_sensitivity, tree_wire_bytes)
+                        simulate, straggler_sensitivity,
+                        timeline_from_accounting, tree_wire_bytes)
 
 CFG = DenseNetConfig(growth=8, blocks=(3, 6), stem_ch=8, cut_layer=1)
 N_TRAIN = [48, 32, 48, 16, 32]
@@ -215,6 +216,38 @@ def test_simulated_breakdown_matches_analytic_breakdown():
         assert r.breakdown[tag] == pytest.approx(b), tag
 
 
+@pytest.mark.parametrize("method", ["sl_ac", "sflv3_ac"])
+def test_nls_breakdown_keys_match_comm_and_directions(method):
+    """The NLS hidden legs were tagged with swapped names relative to
+    their physical directions: per-tag buckets must use the SAME keys as
+    ``comm_per_epoch`` and every directional tag must agree with the
+    transfer's direction (hidden activations flow DOWN to the client-held
+    tail, their gradients back UP)."""
+    ad = _adapter(nls=True)
+    r = simulate(method, ad, _batch(), N_TRAIN, N_VAL, BS, "identity",
+                 "lan")
+    analytic = comm_per_epoch(method, ad, _batch(), N_TRAIN, N_VAL, BS)
+    assert set(r.breakdown) == set(analytic.breakdown)
+    for tag, b in analytic.breakdown.items():
+        assert r.breakdown[tag] == pytest.approx(b), tag
+    for e in r.events:
+        if e.tag.endswith("_down"):
+            assert e.direction == "down", e.tag
+        elif e.tag.endswith("_up"):
+            assert e.direction == "up", e.tag
+
+
+def test_compression_ratio_nan_when_nothing_crossed_the_wire():
+    """Both zero-byte paths report nan, not a bogus bytes_raw/1 ratio."""
+    ad = _adapter()
+    r = simulate("centralized", ad, _batch(), N_TRAIN, N_VAL, BS,
+                 "identity", "lan", keep_events=False)
+    assert r.bytes_on_wire == 0
+    assert np.isnan(r.compression_ratio)
+    tp = Transport("int8")
+    assert np.isnan(tp.compression_ratio)
+
+
 def test_codec_shrinks_simulated_bytes_and_wallclock():
     ad = _adapter()
     args = (ad, _batch(), N_TRAIN, N_VAL, BS)
@@ -364,6 +397,111 @@ def test_training_with_int8_transport_runs_and_compresses():
     assert np.isfinite(log.mean_loss)
     assert tp.compression_ratio > 2.0
     assert tp.bytes_on_wire > 0
+
+
+def test_transport_cache_keyed_on_adapter_boundary():
+    """One Transport shared across adapters with different cut points must
+    not reuse the first adapter's boundary sizes (the shape cache used to
+    be keyed on batch shapes alone)."""
+    ad1 = cnn_adapter(build_densenet(CFG))                       # cut 1
+    ad2 = cnn_adapter(build_densenet(
+        dataclasses.replace(CFG, cut_layer=2)))                  # cut 2
+    b = _batch()
+    solo1, solo2 = Transport("identity"), Transport("identity")
+    solo1.account(ad1, b)
+    solo2.account(ad2, b)
+    assert solo1.bytes_on_wire != solo2.bytes_on_wire
+    shared = Transport("identity")
+    shared.account(ad1, b)
+    shared.account(ad2, b)
+    assert shared.bytes_on_wire == pytest.approx(
+        solo1.bytes_on_wire + solo2.bytes_on_wire)
+
+
+# ---------------------------------------------------------------------------
+# analytic -> timeline bridge: trained accounting replays to simulate()'s
+# exact wall-clock and per-tag bytes, whichever engine trained
+# ---------------------------------------------------------------------------
+
+def _train_with_transport(method, engine, adapter, data, bs):
+    import jax as _jax
+    from repro import optim as O
+    from repro.core.strategies import make_strategy
+    tp = Transport("identity")
+    strat = make_strategy(method, adapter, lambda: O.adam(1e-3), len(data),
+                          transport=tp, engine=engine)
+    state = strat.setup(_jax.random.key(0))
+    strat.run(state, data, np.random.default_rng(0), bs, 1)
+    return tp
+
+
+@pytest.mark.parametrize("method", ["sl_am", "sflv2_ac", "sflv3_ac"])
+def test_timeline_from_accounting_engine_independent(method):
+    """Acceptance gate: simulate() and the trained-transport replay agree
+    exactly (identity codec, same seed) whether the accounting came from
+    the stepwise per-step path or the compiled analytic path."""
+    ad = _adapter()
+    n, bs = [24, 16, 8], 8
+    data = [{"image": np.random.default_rng(c).normal(
+                 0, 1, (nn, 16, 16, 1)).astype(np.float32),
+             "label": (np.arange(nn) % 2).astype(np.float32)}
+            for c, nn in enumerate(n)]
+    n_val = [8, 8, 8]
+    results = {}
+    for engine in ("stepwise", "compiled"):
+        tp = _train_with_transport(method, engine, ad, data, bs)
+        assert len(tp.epoch_log) == 1
+        results[engine] = timeline_from_accounting(
+            tp, n_val=n_val, batch_size=bs, network="hospital_wan", seed=3)
+    eb = {k: v[:bs] for k, v in data[0].items()}
+    sim = simulate(method, ad, eb, n, n_val, bs, "identity",
+                   "hospital_wan", seed=3)
+    for r in results.values():
+        assert r.wall_clock_s == sim.wall_clock_s
+        assert r.breakdown == sim.breakdown
+        assert r.bytes_on_wire == sim.bytes_on_wire
+        assert r.bytes_raw == sim.bytes_raw
+
+
+def test_timeline_from_accounting_multi_epoch_bytes():
+    """An E-epoch trained run replays to exactly E x the per-epoch
+    analytic profile (identity codec) — train-only without n_val, full
+    profile with per-epoch validation legs."""
+    ad = _adapter()
+    n, bs, E = [24, 16, 8], 8, 3
+    data = [{"image": np.random.default_rng(c).normal(
+                 0, 1, (nn, 16, 16, 1)).astype(np.float32),
+             "label": (np.arange(nn) % 2).astype(np.float32)}
+            for c, nn in enumerate(n)]
+    n_val = [8, 8, 8]
+    import jax as _jax
+    from repro import optim as O
+    from repro.core.strategies import make_strategy
+    tp = Transport("identity")
+    strat = make_strategy("sl_am", ad, lambda: O.adam(1e-3), len(data),
+                          transport=tp)            # default engine
+    state = strat.setup(_jax.random.key(0))
+    strat.run(state, data, np.random.default_rng(0), bs, E)
+    assert len(tp.epoch_log) == E
+    eb = {k: v[:bs] for k, v in data[0].items()}
+    full = comm_per_epoch("sl_am", ad, eb, n, n_val, bs)
+    with_val = timeline_from_accounting(tp, n_val=n_val, batch_size=bs,
+                                        network="lan", keep_events=False)
+    assert with_val.bytes_on_wire == E * full.bytes_per_epoch
+    train_only = timeline_from_accounting(tp, network="lan",
+                                          keep_events=False)
+    train_bytes = sum(v for k, v in full.breakdown.items()
+                      if not k.startswith("val_"))
+    assert train_only.bytes_on_wire == E * train_bytes
+    # and the transport's own counters agree (identity codec, no
+    # wrap-around for sl)
+    assert tp.bytes_on_wire == train_only.bytes_on_wire
+
+
+def test_timeline_from_accounting_empty_transport():
+    r = timeline_from_accounting(Transport("identity"), network="lan")
+    assert r.bytes_on_wire == 0 and r.wall_clock_s == 0
+    assert np.isnan(r.compression_ratio)
 
 
 def test_sflv3_rejects_client_without_a_full_batch():
