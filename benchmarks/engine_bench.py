@@ -18,14 +18,25 @@ Writes ``benchmarks/results/BENCH_engine.json``:
      "speedup": {"fl@10": 7.3,          # compiled / stepwise, one epoch
                  "fl@10:run3": 9.1}}    # whole 3-epoch run
 
+``--shard`` additionally times the compiled engine with
+``make_strategy(..., shard=True)`` — the hospital axis placed on the
+``core.placement`` "hosp" mesh (pad-to-mesh phantom hospitals when the
+count does not divide the device count) — recorded as ``:shard`` rows
+and speedup keys.  Run it under
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` or on a real
+multi-device host; on one device shard=True is a no-op and the column
+just duplicates the compiled numbers.
+
 ``--check-against BENCH.json`` re-reads a committed baseline and FAILS
 (exit 1) if any matching compiled-vs-stepwise speedup regressed by more
 than 20%.  Speedups are regime-sensitive (steps per epoch change how far
 dispatch overhead is amortized), so gate like against like: the slow CI
 job runs the smoke grid against the committed
-``benchmarks/results/BENCH_engine_smoke.json``.
+``benchmarks/results/BENCH_engine_smoke.json``, and the multi-device job
+runs ``--smoke --shard`` against
+``benchmarks/results/BENCH_engine_smoke_shard.json``.
 
-  PYTHONPATH=src python -m benchmarks.engine_bench [--smoke]
+  PYTHONPATH=src python -m benchmarks.engine_bench [--smoke] [--shard]
       [--methods fl,sl_am,sflv3_ac] [--clients 3,10,50] [--epochs N]
       [--run-epochs 3] [--check-against PATH]
 """
@@ -65,9 +76,10 @@ def build_setup(n_clients: int, train_per_client: int, image_size: int):
     return clients, cnn_adapter(build_densenet(cfg))
 
 
-def time_engine(method, engine, clients, adapter, batch_size, epochs):
+def time_engine(method, engine, clients, adapter, batch_size, epochs,
+                shard=False):
     strat = make_strategy(method, adapter, lambda: O.adam(1e-3),
-                          len(clients), engine=engine)
+                          len(clients), engine=engine, shard=shard)
     state = strat.setup(jax.random.key(0))
     rng = np.random.default_rng(0)
     data = [c.train for c in clients]
@@ -84,17 +96,17 @@ def time_engine(method, engine, clients, adapter, batch_size, epochs):
         times.append(time.perf_counter() - t0)
     sec = float(np.median(times))
     return {"method": method, "n_clients": len(clients), "engine": engine,
-            "mode": "epoch", "steps_per_epoch": log.steps,
-            "epoch_seconds": sec,
+            "mode": "epoch", "shard": bool(shard),
+            "steps_per_epoch": log.steps, "epoch_seconds": sec,
             "steps_per_sec": log.steps / sec if sec > 0 else float("inf")}
 
 
 def time_whole_run(method, engine, clients, adapter, batch_size,
-                   run_epochs, reps):
+                   run_epochs, reps, shard=False):
     """Time ``Strategy.run(n_epochs=run_epochs)`` — ONE program under the
     compiled engine, a per-epoch loop under stepwise."""
     strat = make_strategy(method, adapter, lambda: O.adam(1e-3),
-                          len(clients), engine=engine)
+                          len(clients), engine=engine, shard=shard)
     state = strat.setup(jax.random.key(0))
     rng = np.random.default_rng(0)
     data = [c.train for c in clients]
@@ -111,8 +123,8 @@ def time_whole_run(method, engine, clients, adapter, batch_size,
     sec = float(np.median(times))
     steps = sum(l.steps for l in logs)
     return {"method": method, "n_clients": len(clients), "engine": engine,
-            "mode": f"run{run_epochs}", "steps_per_epoch": steps,
-            "epoch_seconds": sec,
+            "mode": f"run{run_epochs}", "shard": bool(shard),
+            "steps_per_epoch": steps, "epoch_seconds": sec,
             "steps_per_sec": steps / sec if sec > 0 else float("inf")}
 
 
@@ -152,6 +164,12 @@ def main():
     ap.add_argument("--check-against", default=None,
                     help="committed BENCH_engine.json to gate speedups "
                          "against (fail on >20%% regression)")
+    ap.add_argument("--shard", action="store_true",
+                    help="also time the compiled engine with shard=True "
+                         "(hospital axis on the hosp device mesh; run "
+                         "under XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N or on a multi-device host); "
+                         "recorded as ':shard' speedup keys")
     args = ap.parse_args()
 
     methods = (args.methods.split(",") if args.methods
@@ -162,33 +180,43 @@ def main():
     epochs = args.epochs or (1 if args.smoke else 2)
     tpc = args.train_per_client or (16 if args.smoke else 128)
 
+    # shard=True times the compiled engine with the hospital axis on the
+    # hosp mesh; the stepwise baseline never shards, so the ':shard'
+    # speedup key gates the SHARDED compiled path against the same oracle
+    shard_grid = [False] + ([True] if args.shard else [])
     results, speedup = [], {}
     for n in clients_grid:
         clients, adapter = build_setup(n, tpc, image_size=8)
         for method in methods:
             for mode_fn, tag in (
-                    (lambda m, e: time_engine(m, e, clients, adapter,
-                                              args.batch, epochs), ""),
-                    (lambda m, e: time_whole_run(m, e, clients, adapter,
-                                                 args.batch,
-                                                 args.run_epochs, epochs),
+                    (lambda m, e, sh: time_engine(m, e, clients, adapter,
+                                                  args.batch, epochs,
+                                                  shard=sh), ""),
+                    (lambda m, e, sh: time_whole_run(m, e, clients, adapter,
+                                                     args.batch,
+                                                     args.run_epochs,
+                                                     epochs, shard=sh),
                      f":run{args.run_epochs}")):
-                row = {}
-                for engine in ("stepwise", "compiled"):
-                    r = mode_fn(method, engine)
+                base = mode_fn(method, "stepwise", False)
+                results.append(base)
+                print(f"{method:10s} n={n:3d} {'stepwise':15s} "
+                      f"{base['mode']:6s} {base['steps_per_sec']:9.1f} "
+                      f"steps/s ({base['epoch_seconds'] * 1e3:8.1f} ms)")
+                for sh in shard_grid:
+                    r = mode_fn(method, "compiled", sh)
                     results.append(r)
-                    row[engine] = r
-                    print(f"{method:10s} n={n:3d} {engine:9s} "
+                    name = "compiled" + (":shard" if sh else "")
+                    print(f"{method:10s} n={n:3d} {name:15s} "
                           f"{r['mode']:6s} {r['steps_per_sec']:9.1f} "
-                          f"steps/s "
-                          f"({r['epoch_seconds'] * 1e3:8.1f} ms)")
-                sp = (row["compiled"]["steps_per_sec"]
-                      / row["stepwise"]["steps_per_sec"])
-                speedup[f"{method}@{n}{tag}"] = round(sp, 2)
-                print(f"{method:10s} n={n:3d} speedup {row['compiled']['mode']:8s}"
-                      f" {sp:7.2f}x")
+                          f"steps/s ({r['epoch_seconds'] * 1e3:8.1f} ms)")
+                    sp = r["steps_per_sec"] / base["steps_per_sec"]
+                    key = f"{method}@{n}{tag}" + (":shard" if sh else "")
+                    speedup[key] = round(sp, 2)
+                    print(f"{method:10s} n={n:3d} speedup {name:8s}"
+                          f" {sp:7.2f}x")
 
     out = {"device": jax.devices()[0].device_kind,
+           "n_devices": jax.device_count(),
            "batch_size": args.batch, "train_per_client": tpc,
            "epochs_timed": epochs, "run_epochs": args.run_epochs,
            "results": results, "speedup": speedup}

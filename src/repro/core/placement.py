@@ -1,0 +1,180 @@
+"""Hospital-axis device placement — pad-to-mesh sharding.
+
+The paper's central comparison (FL vs SL vs SplitFed on per-hospital
+cohorts) is embarrassingly parallel over hospitals, and every compiled
+program in ``core/strategies/engine.py`` carries a ``[n_clients, ...]``
+(hospital-leading) axis: epoch batch stacks ``[C, NB, B, ...]``, whole-run
+stacks ``[E, C, NB, B, ...]``, stacked client params/opt state, per-step
+key-index grids, and the batched-eval data stacks.  ``Placement`` makes
+that axis a first-class sharded dimension:
+
+  * **mesh** — a 1-D ``("hosp",)`` mesh over the local devices (real
+    accelerators, or ``XLA_FLAGS=--xla_force_host_platform_device_count``
+    virtual host devices).  On a single device the mesh is ``None`` and
+    every placement op is the identity — the engine runs unchanged.
+  * **pad-to-mesh** — ``n_clients`` is padded UP to the next device
+    multiple with *phantom hospitals*: zero-sample clients whose batch
+    rows are zeros, whose pad-and-mask rows are all invalid, and whose
+    FedAvg / server-gradient / client-sync weights are exactly zero.  The
+    engine's existing pad-and-mask machinery then guarantees losses,
+    aggregated params, metrics, DP accounting, and wire byte meters are
+    unaffected (asserted in tests/test_placement.py) — so ANY hospital
+    count runs on ANY device count.
+  * **specs** — shardings are built through the launch layer's rule
+    table (``launch/mesh.py::spec_for`` / ``tree_shardings``) with the
+    logical axis name ``"clients"``, not bespoke ``NamedSharding``
+    constructions, so the same arrays place correctly on the production
+    ``("pod", "data", "model")`` meshes where ``"clients"`` maps to the
+    data axis.
+
+Strategies hold one ``Placement`` (built by ``Strategy.__init__`` from
+``make_strategy(..., shard=True)``) and thread it through
+``engine.pack_epoch``/``pack_run`` (``pad_clients=placement.n_pad``),
+every run builder, aggregation, and ``Strategy.scores_all``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+HOSP_AXIS = "hosp"
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """Device placement of the hospital axis.
+
+    ``n_clients`` is the REAL hospital count; ``c_pad >= n_clients`` is the
+    array-layout count (a multiple of the mesh size) — rows past
+    ``n_clients`` are phantom hospitals.  ``mesh`` is the 1-D ``("hosp",)``
+    mesh, or ``None`` when placement is disabled (single device / shard
+    off), in which case only the padding contract applies.
+    """
+    n_clients: int
+    c_pad: int
+    mesh: object | None = None
+
+    @classmethod
+    def make(cls, n_clients: int, enabled: bool = True,
+             devices=None) -> "Placement":
+        """Build the placement for ``n_clients`` hospitals on the local
+        devices.  Disabled (or single-device, or zero-client) placements
+        are total no-ops: no mesh, no padding."""
+        if devices is None:
+            devices = jax.devices()
+        if not enabled or n_clients <= 0 or len(devices) < 2:
+            return cls(n_clients, max(n_clients, 0), None)
+        from jax.sharding import Mesh
+        d = len(devices)
+        c_pad = -(-n_clients // d) * d
+        return cls(n_clients, c_pad, Mesh(np.asarray(devices), (HOSP_AXIS,)))
+
+    # -- predicates ----------------------------------------------------------
+    @property
+    def enabled(self) -> bool:
+        """A mesh exists: hosp-axis arrays are device_put across it."""
+        return self.mesh is not None
+
+    @property
+    def padded(self) -> bool:
+        return self.c_pad > self.n_clients
+
+    @property
+    def n_pad(self) -> int:
+        """Phantom hospital count appended by ``engine.pack_epoch``."""
+        return self.c_pad - self.n_clients
+
+    # -- phantom-hospital masking -------------------------------------------
+    def client_weights(self) -> np.ndarray:
+        """``[c_pad]`` float32: 1 for real hospitals, 0 for phantoms — the
+        weights that make SFLv3 server-gradient averaging and SFLv2/v1
+        client syncs provably ignore padding rows."""
+        w = np.zeros((self.c_pad,), np.float32)
+        w[:self.n_clients] = 1.0
+        return w
+
+    # -- shardings (built through the launch-layer rule table) ---------------
+    def sharding(self, shape: tuple, axis: int = 0):
+        """NamedSharding placing ``shape``'s ``axis`` on the hosp mesh,
+        via ``launch.mesh.spec_for`` (divisibility + axis-reuse rules)."""
+        from jax.sharding import NamedSharding
+        from repro.launch.mesh import spec_for
+        axes = tuple("clients" if i == axis else None
+                     for i in range(len(shape)))
+        return NamedSharding(self.mesh, spec_for(axes, shape, self.mesh))
+
+    def tree_shardings(self, tree, axis: int = 0):
+        """Sharding pytree for a stacked-client tree (every leaf carries
+        the hospital axis at ``axis``) via ``launch.mesh.tree_shardings``."""
+        from repro.launch.mesh import tree_shardings
+        axes = jax.tree.map(
+            lambda l: tuple("clients" if i == axis else None
+                            for i in range(l.ndim)), tree)
+        shapes = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+        return tree_shardings(axes, shapes, self.mesh)
+
+    def leaf_specs(self, tree, axis: int = 0):
+        """Per-leaf ``PartitionSpec`` pytree for ``shard_map``: leaves
+        carrying the hospital axis at ``axis`` are split on "hosp", the
+        rest (rank-0 optimizer step counts, server-shaped leaves) are
+        replicated.  Needed where a single prefix spec cannot describe a
+        mixed tree (stacked Adam state has a scalar count)."""
+        from jax.sharding import PartitionSpec as P
+
+        def one(l):
+            if getattr(l, "ndim", 0) > axis and l.shape[axis] == self.c_pad:
+                return P(*([None] * axis + [HOSP_AXIS]))
+            return P()
+
+        return jax.tree.map(one, tree)
+
+    # -- placement ops -------------------------------------------------------
+    def put(self, tree, axis: int = 0):
+        """device_put every leaf whose ``shape[axis] == c_pad`` onto the
+        hosp mesh; other leaves (server params, schedule arrays, scalars)
+        are left alone.  Identity when disabled."""
+        if not self.enabled:
+            return tree
+
+        def one(x):
+            if getattr(x, "ndim", 0) > axis and x.shape[axis] == self.c_pad:
+                return jax.device_put(x, self.sharding(x.shape, axis))
+            return x
+
+        return jax.tree.map(one, tree)
+
+    def pad_tree(self, tree, mode: str = "edge"):
+        """Pad the leading hospital axis of every leaf from ``n_clients``
+        to ``c_pad`` rows.  ``mode="edge"`` repeats the last real row
+        (finite phantom params keep every model forward well-defined);
+        ``mode="zeros"`` appends zero rows.  Identity when not padded."""
+        if not self.padded:
+            return tree
+        pad = self.n_pad
+
+        def one(x):
+            if getattr(x, "ndim", 0) < 1 or x.shape[0] != self.n_clients:
+                return x
+            import jax.numpy as jnp
+            if mode == "edge":
+                tail = jnp.broadcast_to(x[-1:], (pad, *x.shape[1:]))
+            else:
+                tail = jnp.zeros((pad, *x.shape[1:]), x.dtype)
+            return jnp.concatenate([jnp.asarray(x), tail], axis=0)
+
+        return jax.tree.map(one, tree)
+
+    def pad_rows(self, x: np.ndarray) -> np.ndarray:
+        """Zero-pad a host-side ``[n_clients, ...]`` array to ``c_pad``
+        rows (the eval data-stack counterpart of ``pad_tree``)."""
+        if not self.padded or x.shape[0] != self.n_clients:
+            return x
+        return np.concatenate(
+            [x, np.zeros((self.n_pad, *x.shape[1:]), x.dtype)], axis=0)
+
+
+__all__ = ["Placement", "HOSP_AXIS"]

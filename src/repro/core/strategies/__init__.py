@@ -28,8 +28,12 @@ def make_strategy(method: str, adapter, opt_factory, n_clients,
     under either engine (``wire.simulator.timeline_from_accounting``).
     ``drop_remainder=False`` keeps the final short batch of each hospital
     (pad-and-mask on the compiled path).  ``shard=True`` places the
-    hospital axis across local devices where possible (no-op on one
-    device).
+    hospital axis of every compiled program across the local devices on a
+    ``("hosp",)`` mesh (``repro.core.placement``): hospital counts that do
+    not divide the device count are padded with zero-weight phantom
+    hospitals, so any ``n_clients`` runs on any device count with results
+    identical to ``shard=False`` (≤1e-5; no-op on one device or under the
+    stepwise oracle).
     """
     kw = dict(privacy=privacy, engine=engine,
               drop_remainder=drop_remainder, shard=shard)

@@ -110,13 +110,25 @@ class Strategy:
         self.engine = engine
         self.drop_remainder = drop_remainder
         self.shard = shard              # place hospital axis across devices
+        from repro.core.placement import Placement
+        # pad-to-mesh hospital-axis placement (no-op mesh on one device;
+        # the stepwise parity oracle never pads or shards)
+        self.placement = Placement.make(
+            n_clients, enabled=shard and engine == "compiled")
         self._accountants = None
         self._key_step = 0
-        if engine == "compiled" and not drop_remainder and self._keyed:
+        if (engine == "compiled" and not drop_remainder
+                and privacy is not None and privacy.cut_noise_std > 0
+                and not privacy.dp_enabled):
+            # DP-SGD is per-example (weighted clipping makes padded rows
+            # exact no-ops), but batch-level cut-layer noise draws depend
+            # on the batch SHAPE — a padded remainder batch cannot
+            # reproduce the stepwise short-batch draw
             raise ValueError(
-                "compiled engine with drop_remainder=False cannot reproduce "
-                "keyed (DP / cut-noise) draws on partial batches; use "
-                "drop_remainder=True")
+                "compiled engine with drop_remainder=False cannot "
+                "reproduce cut-layer-noise-only draws on partial batches "
+                "(noise shape follows the padded batch); use "
+                "drop_remainder=True or enable DP-SGD clipping")
 
     # -- to implement ---------------------------------------------------------
     def setup(self, key):
@@ -220,16 +232,29 @@ class Strategy:
         return [a.summary() for a in self._accountants]
 
     # -- common ---------------------------------------------------------------
-    def _scores_all_fn(self):
+    def _scores_all_fn(self, placed: bool = False):
         """Jitted (vmap over hospitals) x (vmap over batches) scorer: ONE
-        dispatch evaluates every hospital's padded epoch."""
-        if not hasattr(self, "_scores_all_jit"):
-            fs = self.adapter.full_scores
-            in_p = None if self.shared_eval_params else 0
-            self._scores_all_jit = jax.jit(
-                jax.vmap(lambda p, d: jax.vmap(partial(fs, p))(d),
-                         in_axes=(in_p, 0)))
-        return self._scores_all_jit
+        dispatch evaluates every hospital's padded epoch.  ``placed`` runs
+        the hospital vmap inside ``shard_map`` chunks on the "hosp" mesh
+        (the SPMD partitioner cannot split vmapped convs, so multi-device
+        eval chunks explicitly, like the training engine)."""
+        fs = self.adapter.full_scores
+        in_p = None if self.shared_eval_params else 0
+        vmapped = jax.vmap(lambda p, d: jax.vmap(partial(fs, p))(d),
+                           in_axes=(in_p, 0))
+        if not placed:
+            if not hasattr(self, "_scores_all_jit"):
+                self._scores_all_jit = jax.jit(vmapped)
+            return self._scores_all_jit
+        if not hasattr(self, "_scores_all_place_jit"):
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+            self._scores_all_place_jit = jax.jit(shard_map(
+                vmapped, mesh=self.placement.mesh,
+                in_specs=(P() if self.shared_eval_params else P("hosp"),
+                          P("hosp")),
+                out_specs=P("hosp"), check_rep=False))
+        return self._scores_all_place_jit
 
     def _stacked_eval_params(self, state):
         if self.shared_eval_params:
@@ -243,7 +268,10 @@ class Strategy:
         Each hospital's split is padded (repeating the last row — the
         existing partial-batch idiom) to a common ``nb * bs`` grid, stacked
         along a leading hospital axis, and scored by the vmapped scorer;
-        padding rows are sliced off per hospital.
+        padding rows are sliced off per hospital.  With placement enabled
+        the hospital axis of the data stack (and the stacked params) is
+        padded to the mesh multiple and placed on the "hosp" mesh —
+        phantom-row scores are computed and discarded.
         """
         ns = [len(d["label"]) for d in datas]
         n_max = max(ns, default=0)
@@ -265,7 +293,14 @@ class Strategy:
         stacked = {k: v.reshape(len(datas), nb, bs, *v.shape[2:])
                    for k, v in stacked.items()}
         params = self._stacked_eval_params(state)
-        out = np.asarray(self._scores_all_fn()(params, stacked))
+        place = self.placement
+        placed = place.enabled and len(datas) == self.n_clients
+        if placed:
+            stacked = place.put({k: place.pad_rows(v)
+                                 for k, v in stacked.items()})
+            if not self.shared_eval_params:
+                params = place.put(place.pad_tree(params))
+        out = np.asarray(self._scores_all_fn(placed)(params, stacked))
         out = out.reshape(out.shape[0], L, *out.shape[3:])
         return [out[i, :ns[i]] for i in range(len(datas))]
 
@@ -333,7 +368,10 @@ def full_step_fn(adapter: SplitAdapter, opt: O.Optimizer, privacy=None):
         vg = dp_value_and_grad(keyed(adapter.full_loss), privacy)
 
         def dp_step(params, opt_state, batch, key=None, weights=None):
-            loss, grads = vg(params, batch, key)
+            # weights (0/1 pad mask) ride through the DP estimator itself:
+            # zero-weight padded examples clip to zero contribution and the
+            # 1/B mean divides by the REAL example count
+            loss, grads = vg(params, batch, key, weights)
             updates, opt_state = opt.update(grads, opt_state, params)
             return O.apply_updates(params, updates), opt_state, loss
         return dp_step, True
@@ -375,15 +413,20 @@ def split_step_fn(adapter: SplitAdapter, opt_client: O.Optimizer,
                 params = {"front": both["c"]["front"], "middle": both["s"]}
                 if nls:
                     params["tail"] = both["c"]["tail"]
+                # under DP the estimator itself weights the clipped
+                # per-example grads, so the inner loss stays per-example
                 return adapter.full_loss(
                     params, b,
                     boundary=boundary_with_key(base_boundary, priv, k),
-                    weights=weights)
+                    weights=None if priv.dp_enabled else weights)
 
-            vg = (dp_value_and_grad(loss_fn, priv) if priv.dp_enabled
-                  else jax.value_and_grad(loss_fn))
-            loss, g = vg({"c": client_params, "s": server_params}, batch,
-                         key)
+            if priv.dp_enabled:
+                loss, g = dp_value_and_grad(loss_fn, priv)(
+                    {"c": client_params, "s": server_params}, batch, key,
+                    weights)
+            else:
+                loss, g = jax.value_and_grad(loss_fn)(
+                    {"c": client_params, "s": server_params}, batch, key)
             cu, c_opt = opt_client.update(g["c"], c_opt, client_params)
             su, s_opt = opt_server.update(g["s"], s_opt, server_params)
             return (O.apply_updates(client_params, cu),
@@ -410,29 +453,62 @@ def split_step_fn(adapter: SplitAdapter, opt_client: O.Optimizer,
 
 def sflv3_step_fn(adapter: SplitAdapter, opt_client: O.Optimizer,
                   opt_server: O.Optimizer, n_clients: int, transport=None,
-                  privacy=None):
+                  privacy=None, client_weights=None, mesh_axis=None):
     """Pure SplitFedv3 step (paper Algorithm 1, batch-synchronous form):
     clients run in parallel (vmap over the stacked client axis); the server
     segment is updated once with the weighted average of per-client server
     gradients; client segments update individually (never averaged).
 
+    ``n_clients`` is the LOCAL stacked row count the step vmaps over.
+    ``client_weights`` (a GLOBAL 0/1 mask over all rows, e.g.
+    ``Placement.client_weights``) excludes phantom padding rows from the
+    server average and the reported loss — with weights of all ones (or
+    None) the math is EXACTLY the unweighted step.  Under ``mesh_axis``
+    (the compiled engine's ``shard_map`` over the "hosp" mesh) each device
+    holds ``n_clients`` of the global rows: per-client keys and weights
+    index by the GLOBAL row (``axis_index * n_clients + local``), and the
+    server-gradient average is completed with a ``psum`` — so the update
+    is bit-comparable to the single-device step regardless of the chunking.
+
     Returns ``(step, keyed)`` with ``step(stacked_clients, server_params,
     c_opt, s_opt, stacked_batch, key=None)``.  A privacy config makes the
     step keyed: every client clips and noises its OWN per-example gradients
-    (keys split per client) before the server averages, so each hospital's
-    DP guarantee stands on its own.
+    (per-client keys are ``fold_in(step_key, global_client_idx)``, so a
+    real hospital's draws do not depend on how many padding rows ride
+    along) before the server averages, so each hospital's DP guarantee
+    stands on its own.
     """
+    import jax.numpy as jnp
     nls = adapter.nls
     boundary = transport.boundary if transport is not None else None
     priv = (privacy if privacy is not None and
             (privacy.dp_enabled or privacy.cut_noise_std > 0) else None)
+    w_global = (np.ones((n_clients,), np.float32)
+                if client_weights is None
+                else np.asarray(client_weights, np.float32))
+    w_sum = float(w_global.sum())
+
+    def _local_rows():
+        """(row offset, local weight column) for this device's chunk."""
+        off = (0 if mesh_axis is None
+               else jax.lax.axis_index(mesh_axis) * n_clients)
+        w = jax.lax.dynamic_slice(jnp.asarray(w_global), (off,),
+                                  (n_clients,))
+        return off, w
+
+    def _server_mean(gs_local):
+        if mesh_axis is None:
+            return gs_local
+        return jax.lax.psum(gs_local, mesh_axis)
 
     if priv is not None:
         from repro.privacy.dpsgd import boundary_with_key, dp_value_and_grad
 
         def dp_step(stacked_clients, server_params, c_opt, s_opt,
                     stacked_batch, key=None):
-            keys = jax.random.split(key, n_clients)
+            off, w_local = _local_rows()
+            keys = jax.vmap(lambda c: jax.random.fold_in(key, c))(
+                (off + jnp.arange(n_clients)).astype(jnp.uint32))
 
             def loss_fn(both, b, k):
                 params = {"front": both["c"]["front"], "middle": both["s"]}
@@ -449,7 +525,9 @@ def sflv3_step_fn(adapter: SplitAdapter, opt_client: O.Optimizer,
 
             losses, g = jax.vmap(one)(stacked_clients, stacked_batch, keys)
             gc = g["c"]                          # already per-client grads
-            gs = jax.tree.map(lambda x: x.mean(axis=0), g["s"])
+            gs = _server_mean(jax.tree.map(
+                lambda x: (x * w_local.reshape((-1,) + (1,) * (x.ndim - 1))
+                           ).sum(axis=0) / w_sum, g["s"]))
             cu, c_opt = opt_client.update(gc, c_opt, stacked_clients)
             su, s_opt = opt_server.update(gs, s_opt, server_params)
             return (O.apply_updates(stacked_clients, cu),
@@ -459,6 +537,8 @@ def sflv3_step_fn(adapter: SplitAdapter, opt_client: O.Optimizer,
 
     def step(stacked_clients, server_params, c_opt, s_opt, stacked_batch,
              key=None):
+        _, w_local = _local_rows()
+
         def client_loss(cp, sp, batch):
             params = {"front": cp["front"], "middle": sp}
             if nls:
@@ -468,13 +548,16 @@ def sflv3_step_fn(adapter: SplitAdapter, opt_client: O.Optimizer,
         def mean_loss(sc, sp):
             losses = jax.vmap(lambda cp, b: client_loss(cp, sp, b))(
                 sc, stacked_batch)
-            return losses.mean(), losses
+            return (losses * w_local).sum() / w_sum, losses
 
         (loss, losses), (gc, gs) = jax.value_and_grad(
             mean_loss, argnums=(0, 1), has_aux=True)(stacked_clients,
                                                      server_params)
-        # gc is stacked per-client (mean grad => scale back to per-client)
-        gc = jax.tree.map(lambda g: g * n_clients, gc)
+        # gc is stacked per-client (weighted-mean grad => scale back to
+        # per-client; a zero-weight phantom row's grad is exactly zero, so
+        # the uniform w_sum rescale leaves it zero)
+        gc = jax.tree.map(lambda g: g * w_sum, gc)
+        gs = _server_mean(gs)
         cu, c_opt = opt_client.update(gc, c_opt, stacked_clients)
         su, s_opt = opt_server.update(gs, s_opt, server_params)
         return (O.apply_updates(stacked_clients, cu),

@@ -42,9 +42,12 @@ Every scan body calls the SAME pure step functions
 jit wrappers use, which is what makes the two engines numerically
 equivalent (asserted at 1e-5 in tests/test_engine.py).
 
-``maybe_shard`` optionally places the hospital axis across local devices
-(``jax.sharding``); on a single device it is a no-op, so the engine runs
-unchanged on one CPU and scales to a multi-device host.
+Device placement of the hospital axis lives in ``repro.core.placement``:
+a ``Placement`` pads ``n_clients`` up to a device multiple with phantom
+hospitals (``pack_epoch(pad_clients=...)``) and ``device_put``s every
+``[C, ...]`` stack across a 1-D ``("hosp",)`` mesh; on a single device it
+is a no-op, so the engine runs unchanged on one CPU and scales to a
+multi-device host.
 """
 
 from __future__ import annotations
@@ -103,12 +106,18 @@ def _client_batch_count(n: int, batch_size: int,
 
 def pack_epoch(client_data: list, batch_size: int,
                rng: np.random.Generator | None,
-               drop_remainder: bool = True) -> PackedEpoch:
+               drop_remainder: bool = True,
+               pad_clients: int = 0) -> PackedEpoch:
     """Shuffle + pack every hospital's epoch (mirrors ``np_batches``).
 
     The per-client shuffles consume ``rng`` in hospital order — exactly the
     draws the stepwise path makes — so both engines train on identical
     batch compositions.
+
+    ``pad_clients`` appends that many *phantom hospitals* (zero samples,
+    zero batches, all-False mask rows) so the hospital axis reaches a
+    device multiple for ``core.placement`` — phantom rows are masked
+    no-ops in every scan and carry zero weight in every aggregation.
     """
     n_batches, n_samples, step_examples, order = [], [], [], []
     for d in client_data:
@@ -123,7 +132,11 @@ def pack_epoch(client_data: list, batch_size: int,
         n_samples.append(n)
         step_examples.append([batch_size] * nb_full
                              + ([rem] if nb > nb_full else []))
-    C, NB = len(client_data), max(n_batches, default=0)
+    NB = max(n_batches, default=0)
+    n_batches += [0] * pad_clients
+    n_samples += [0] * pad_clients
+    step_examples += [[] for _ in range(pad_clients)]
+    C = len(client_data) + pad_clients
 
     batches = {}
     for k in client_data[0]:
@@ -148,29 +161,6 @@ def pack_epoch(client_data: list, batch_size: int,
 
 
 # ---------------------------------------------------------------------------
-# optional hospital-axis sharding
-# ---------------------------------------------------------------------------
-
-def maybe_shard(tree, n_clients: int, enabled: bool = True):
-    """Place every ``[n_clients, ...]`` leaf across the local devices along
-    the hospital axis.  Single device (or a hospital count that does not
-    divide the device count): no-op — the engine's single-device fallback."""
-    devs = jax.devices()
-    if not enabled or len(devs) < 2 or n_clients % len(devs) != 0:
-        return tree
-    from jax.sharding import Mesh, NamedSharding, PartitionSpec
-    mesh = Mesh(np.asarray(devs), ("hosp",))
-    spec = NamedSharding(mesh, PartitionSpec("hosp"))
-
-    def put(x):
-        if getattr(x, "ndim", 0) >= 1 and x.shape[0] == n_clients:
-            return jax.device_put(x, spec)
-        return x
-
-    return jax.tree.map(put, tree)
-
-
-# ---------------------------------------------------------------------------
 # compiled epoch kernels
 # ---------------------------------------------------------------------------
 
@@ -181,32 +171,53 @@ def _step_key(base_key, idx, keyed):
     return step_key(base_key, idx)
 
 
-def _fl_epoch_body(adapter: SplitAdapter, opt: O.Optimizer, privacy=None):
+def _fl_epoch_body(adapter: SplitAdapter, opt: O.Optimizer, privacy=None,
+                   placement=None):
     """Traceable FL round: vmap-over-hospitals of scan-over-batches.
     Shared verbatim by ``make_fl_epoch`` and ``make_fl_run``'s round scan
-    — one definition is what keeps the two numerically identical."""
+    — one definition is what keeps the two numerically identical.
+
+    With an enabled ``placement`` the hospital axis runs under
+    ``shard_map`` on the "hosp" mesh: each device vmaps over its own
+    hospital chunk with the global params replicated.  (The XLA SPMD
+    partitioner cannot split the grouped-conv lowering of a vmapped CNN
+    along the mapped axis, so per-device chunking is done explicitly —
+    local epochs are independent, so no collectives are needed.)
+    """
     step, keyed = full_step_fn(adapter, opt, privacy)
 
-    def epoch(global_params, batches, mask, ex_w, key_idx, base_key):
+    def all_clients(gp, bk, batches, mask, ex_w, key_idx):
         def per_client(b_c, m_c, w_c, ki_c):
             def body(carry, xs):
                 p, s = carry
                 batch, m, w, ki = xs
-                p2, s2, loss = step(p, s, batch,
-                                    _step_key(base_key, ki, keyed), w)
+                p2, s2, loss = step(p, s, batch, _step_key(bk, ki, keyed),
+                                    w)
                 return (tree_select(m, p2, p), tree_select(m, s2, s)), loss
 
             (p, _), losses = jax.lax.scan(
-                body, (global_params, opt.init(global_params)),
-                (b_c, m_c, w_c, ki_c))
+                body, (gp, opt.init(gp)), (b_c, m_c, w_c, ki_c))
             return p, losses
 
         return jax.vmap(per_client)(batches, mask, ex_w, key_idx)
 
+    def epoch(global_params, batches, mask, ex_w, key_idx, base_key):
+        if placement is None or not placement.enabled:
+            return all_clients(global_params, base_key, batches, mask,
+                               ex_w, key_idx)
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        H = P("hosp")
+        sm = shard_map(all_clients, mesh=placement.mesh,
+                       in_specs=(P(), P(), H, H, H, H),
+                       out_specs=(H, H), check_rep=False)
+        return sm(global_params, base_key, batches, mask, ex_w, key_idx)
+
     return epoch
 
 
-def make_fl_epoch(adapter: SplitAdapter, opt: O.Optimizer, privacy=None):
+def make_fl_epoch(adapter: SplitAdapter, opt: O.Optimizer, privacy=None,
+                  placement=None):
     """FL round as vmap-over-hospitals of scan-over-batches.
 
     Every hospital starts from the broadcast global params with a fresh
@@ -215,7 +226,7 @@ def make_fl_epoch(adapter: SplitAdapter, opt: O.Optimizer, privacy=None):
     Returns ``epoch(global_params, batches, mask, ex_w, key_idx, base_key)
     -> (stacked local params, [C, NB] losses)``.
     """
-    return jax.jit(_fl_epoch_body(adapter, opt, privacy))
+    return jax.jit(_fl_epoch_body(adapter, opt, privacy, placement))
 
 
 def _seq_epoch_body(adapter: SplitAdapter, opt: O.Optimizer, privacy=None):
@@ -293,20 +304,41 @@ def make_interleaved_epoch(adapter: SplitAdapter, opt_client: O.Optimizer,
 
 def _sflv3_epoch_body(adapter: SplitAdapter, opt_client: O.Optimizer,
                       opt_server: O.Optimizer, n_clients: int,
-                      transport=None, privacy=None):
+                      transport=None, privacy=None, client_weights=None,
+                      placement=None):
     """Traceable SplitFedv3/v1 epoch: scan over synchronous steps with the
     vmapped per-client step inside; shared by ``make_sflv3_epoch`` and
-    ``make_sflv3_run``."""
-    step, keyed = sflv3_step_fn(adapter, opt_client, opt_server, n_clients,
-                                transport, privacy)
+    ``make_sflv3_run``.  ``n_clients`` is the ARRAY hospital count (a
+    placement's padded ``c_pad``); ``client_weights`` zeroes phantom rows
+    out of the server-gradient average.
 
-    def epoch(stacked_clients, server, c_opt, s_opt, batches, b_idx,
-              key_idx, base_key):
+    With an enabled ``placement`` the scan runs under ``shard_map``: each
+    device scans over its own hospital chunk (vmapped conv programs never
+    meet the SPMD partitioner) and the per-step server-gradient average is
+    completed with one ``psum`` — the server (and its Adam state) stays
+    replicated, client segments and their Adam state stay sharded.
+    """
+    sharded = placement is not None and placement.enabled
+    if sharded:
+        local = placement.c_pad // placement.mesh.devices.size
+        weights = (placement.client_weights() if client_weights is None
+                   else client_weights)
+        step, keyed = sflv3_step_fn(adapter, opt_client, opt_server, local,
+                                    transport, privacy, weights,
+                                    mesh_axis="hosp")
+    else:
+        local = n_clients
+        step, keyed = sflv3_step_fn(adapter, opt_client, opt_server,
+                                    n_clients, transport, privacy,
+                                    client_weights)
+
+    def chunk_epoch(stacked_clients, server, c_opt, s_opt, batches, b_idx,
+                    key_idx, base_key):
         def body(carry, xs):
             sc, sp, co, so = carry
             bi, ki = xs
             batch = jax.tree.map(
-                lambda x: x[jnp.arange(n_clients), bi], batches)
+                lambda x: x[jnp.arange(local), bi], batches)
             sc, sp, co, so, losses = step(
                 sc, sp, co, so, batch, _step_key(base_key, ki, keyed))
             return (sc, sp, co, so), losses
@@ -315,19 +347,40 @@ def _sflv3_epoch_body(adapter: SplitAdapter, opt_client: O.Optimizer,
             body, (stacked_clients, server, c_opt, s_opt), (b_idx, key_idx))
         return (*carry, losses)
 
+    if not sharded:
+        return chunk_epoch
+
+    def epoch(stacked_clients, server, c_opt, s_opt, batches, b_idx,
+              key_idx, base_key):
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        H = P("hosp")
+        sm = shard_map(
+            chunk_epoch, mesh=placement.mesh,
+            # c_opt mixes [C, ...] leaves with the scalar Adam count, so it
+            # needs per-leaf specs; server + its opt state are replicated
+            in_specs=(H, P(), placement.leaf_specs(c_opt), P(), H,
+                      P(None, "hosp"), P(), P()),
+            out_specs=(H, P(), placement.leaf_specs(c_opt), P(),
+                       P(None, "hosp")),
+            check_rep=False)
+        return sm(stacked_clients, server, c_opt, s_opt, batches, b_idx,
+                  key_idx, base_key)
+
     return epoch
 
 
 def make_sflv3_epoch(adapter: SplitAdapter, opt_client: O.Optimizer,
                      opt_server: O.Optimizer, n_clients: int, transport=None,
-                     privacy=None):
+                     privacy=None, client_weights=None, placement=None):
     """SplitFedv3 epoch: scan over synchronous steps, vmap over hospitals
     inside each step (the step fn already vmaps), with the wrap-around
     batch index precomputed as a dense ``[steps, n_clients]`` array.
     Returns ``epoch(stacked_clients, server, c_opt, s_opt, batches, b_idx,
     key_idx, base_key) -> (..., [steps, C] losses)``."""
     return jax.jit(_sflv3_epoch_body(adapter, opt_client, opt_server,
-                                     n_clients, transport, privacy))
+                                     n_clients, transport, privacy,
+                                     client_weights, placement))
 
 
 def _weighted_mean(stacked, w):
@@ -341,12 +394,25 @@ def _weighted_mean(stacked, w):
     return jax.tree.map(leaf, stacked)
 
 
-def _mean_sync(stacked):
+def _mean_sync(stacked, w=None):
     """SFLv2-style client sync (traceable): every hospital gets the mean
-    of all client segments."""
-    return jax.tree.map(
-        lambda x: jnp.broadcast_to(x.mean(axis=0, keepdims=True), x.shape),
-        stacked)
+    of all client segments.  ``w`` (normalized-to-sum weights, e.g. a
+    placement's phantom mask) makes it a weighted mean so padding rows
+    contribute nothing — phantom rows also RECEIVE the mean, which is
+    harmless (they are never read and never weigh into future syncs)."""
+    if w is None:
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x.mean(axis=0, keepdims=True),
+                                       x.shape), stacked)
+    wn = w.astype(jnp.float32) / w.astype(jnp.float32).sum()
+
+    def leaf(x):
+        wx = wn.reshape((-1,) + (1,) * (x.ndim - 1))
+        m = (x.astype(jnp.float32) * wx).sum(axis=0,
+                                             keepdims=True).astype(x.dtype)
+        return jnp.broadcast_to(m, x.shape)
+
+    return jax.tree.map(leaf, stacked)
 
 
 @jax.jit
@@ -354,16 +420,29 @@ def stacked_weighted_mean(stacked, weights):
     """Data-size-weighted FedAvg over the leading hospital axis — ONE
     fused program instead of per-leaf eager host ops over a list of
     trees (host-side aggregation cost grows with n_clients x n_leaves
-    and was dwarfing the compiled epoch itself)."""
+    and was dwarfing the compiled epoch itself).  Zero-weight rows
+    (placement phantoms) contribute nothing."""
     w = weights.astype(jnp.float32) / weights.astype(jnp.float32).sum()
     return _weighted_mean(stacked, w)
 
 
 @jax.jit
-def stacked_mean_sync(stacked):
-    """SFLv2-style client synchronization on the stacked hospital axis:
-    every hospital gets the mean of all client segments."""
+def _mean_sync_jit(stacked):
     return _mean_sync(stacked)
+
+
+@jax.jit
+def _mean_sync_w_jit(stacked, w):
+    return _mean_sync(stacked, w)
+
+
+def stacked_mean_sync(stacked, weights=None):
+    """SFLv2-style client synchronization on the stacked hospital axis:
+    every hospital gets the (optionally weighted — phantom rows excluded)
+    mean of all client segments."""
+    if weights is None:
+        return _mean_sync_jit(stacked)
+    return _mean_sync_w_jit(stacked, jnp.asarray(weights, jnp.float32))
 
 
 # ---------------------------------------------------------------------------
@@ -384,7 +463,7 @@ def empty_run(client_data, batch_size: int,
 
 
 def pack_run(client_data, batch_size: int, rng, n_epochs: int,
-             drop_remainder: bool = True):
+             drop_remainder: bool = True, pad_clients: int = 0):
     """Pack ``n_epochs`` epochs into ``[n_epochs, n_clients, nb_max, ...]``.
 
     Consumes ``rng`` exactly as a stepwise loop of per-epoch packs would
@@ -392,27 +471,33 @@ def pack_run(client_data, batch_size: int, rng, n_epochs: int,
     on identical batch compositions.  Batch counts, masks and per-example
     weights are epoch-invariant (data sizes never change mid-run) — only
     the shuffles differ — so the returned ``PackedEpoch`` meta is the
-    first epoch's.  Memory grows linearly with ``n_epochs`` (the whole
-    run's batch grid lives in one buffer); callers with huge runs can
-    chunk ``run`` into several calls.
+    first epoch's.  ``pad_clients`` phantom hospitals (see ``pack_epoch``)
+    ride along on axis 1.  Memory grows linearly with ``n_epochs`` (the
+    whole run's batch grid lives in one buffer); callers with huge runs
+    can chunk ``run`` into several calls.
     """
-    packs = [pack_epoch(client_data, batch_size, rng, drop_remainder)
+    packs = [pack_epoch(client_data, batch_size, rng, drop_remainder,
+                        pad_clients)
              for _ in range(n_epochs)]
     batches = {k: np.stack([p.batches[k] for p in packs])
                for k in packs[0].batches}
     return batches, packs[0]
 
 
-def make_fl_run(adapter: SplitAdapter, opt: O.Optimizer, privacy=None):
+def make_fl_run(adapter: SplitAdapter, opt: O.Optimizer, privacy=None,
+                placement=None):
     """Whole FL training run as ONE program: ``lax.scan`` over rounds, each
     round the SAME vmap-over-hospitals scan-over-batches body
     ``make_fl_epoch`` jits, followed by the in-graph data-size-weighted
     FedAvg aggregation.  (Secure aggregation needs host-side per-client
-    masked uploads and keeps the per-round path.)  Returns
+    masked uploads and keeps the per-round path.)  Under placement the
+    epoch body runs in ``shard_map`` chunks and the FedAvg reduction over
+    the sharded hospital axis lowers to one all-reduce per round.
+    Phantom rows carry zero aggregation weight.  Returns
     ``run(global_params, batches[E,C,NB,...], mask, ex_w, key_idx[E,C,NB],
     base_key, agg_weights[C]) -> (params, [E,C,NB] losses)``.
     """
-    epoch = _fl_epoch_body(adapter, opt, privacy)
+    epoch = _fl_epoch_body(adapter, opt, privacy, placement)
 
     def run(global_params, batches, mask, ex_w, key_idx, base_key, agg_w):
         w = agg_w.astype(jnp.float32) / agg_w.astype(jnp.float32).sum()
@@ -449,11 +534,13 @@ def make_seq_run(adapter: SplitAdapter, opt: O.Optimizer, privacy=None):
 
 def make_interleaved_run(adapter: SplitAdapter, opt_client: O.Optimizer,
                          opt_server: O.Optimizer, transport=None,
-                         privacy=None, sync_clients: bool = False):
+                         privacy=None, sync_clients: bool = False,
+                         client_weights=None):
     """Whole SL/SFLv2 run: scan over epochs around the scanned schedule
     interleave body ``make_interleaved_epoch`` jits.  ``sync_clients``
     folds the SFLv2 end-of-epoch client fed-averaging into the round
-    body.  The schedule array is epoch-invariant (batch counts never
+    body (``client_weights`` excludes placement phantom rows from it).
+    The schedule array is epoch-invariant (batch counts never
     change) and is rescanned each round; per-epoch key indices arrive as
     ``key_idx[E, steps]``.  Returns ``run(stacked_clients, server,
     stacked_c_opts, s_opt, batches[E,C,NB,...], ex_w, sched, key_idx,
@@ -461,6 +548,8 @@ def make_interleaved_run(adapter: SplitAdapter, opt_client: O.Optimizer,
     """
     epoch = _interleaved_epoch_body(adapter, opt_client, opt_server,
                                     transport, privacy)
+    sync_w = (None if client_weights is None
+              else jnp.asarray(client_weights, jnp.float32))
 
     def run(stacked_clients, server, stacked_c_opts, s_opt, batches, ex_w,
             sched, key_idx, base_key):
@@ -469,7 +558,7 @@ def make_interleaved_run(adapter: SplitAdapter, opt_client: O.Optimizer,
             sc, sp, co, so, losses = epoch(*carry, b_e, ex_w, sched, ki_e,
                                            base_key)
             if sync_clients:
-                sc = _mean_sync(sc)
+                sc = _mean_sync(sc, sync_w)
             return (sc, sp, co, so), losses
 
         carry, losses = jax.lax.scan(
@@ -482,15 +571,21 @@ def make_interleaved_run(adapter: SplitAdapter, opt_client: O.Optimizer,
 
 def make_sflv3_run(adapter: SplitAdapter, opt_client: O.Optimizer,
                    opt_server: O.Optimizer, n_clients: int, transport=None,
-                   privacy=None, sync_clients: bool = False):
+                   privacy=None, sync_clients: bool = False,
+                   client_weights=None, placement=None):
     """Whole SplitFedv3/v1 run: scan over epochs around the synchronous-
     step scan body ``make_sflv3_epoch`` jits (wrap-around index grid
     ``b_idx`` is epoch-invariant); ``sync_clients`` folds SFLv1's client
-    fed-averaging into the round body.  Returns ``run(stacked_clients,
+    fed-averaging into the round body; ``client_weights`` excludes
+    placement phantom rows from server-gradient averaging and syncs.
+    Returns ``run(stacked_clients,
     server, c_opt, s_opt, batches[E,C,NB,...], b_idx, key_idx[E,steps],
     base_key) -> (..., [E, steps, C] losses)``."""
     epoch = _sflv3_epoch_body(adapter, opt_client, opt_server, n_clients,
-                              transport, privacy)
+                              transport, privacy, client_weights,
+                              placement)
+    sync_w = (None if client_weights is None
+              else jnp.asarray(client_weights, jnp.float32))
 
     def run(stacked_clients, server, c_opt, s_opt, batches, b_idx, key_idx,
             base_key):
@@ -499,7 +594,7 @@ def make_sflv3_run(adapter: SplitAdapter, opt_client: O.Optimizer,
             sc, sp, co, so, losses = epoch(*carry, b_e, b_idx, ki_e,
                                            base_key)
             if sync_clients:
-                sc = _mean_sync(sc)
+                sc = _mean_sync(sc, sync_w)
             return (sc, sp, co, so), losses
 
         carry, losses = jax.lax.scan(

@@ -87,25 +87,28 @@ class FedAvg(Strategy):
 
     def _run_epoch_compiled(self, state, client_data, rng, batch_size):
         from repro.core.strategies import engine as ENG
+        place = self.placement
         packed = ENG.pack_epoch(client_data, batch_size, rng,
-                                self.drop_remainder)
+                                self.drop_remainder,
+                                pad_clients=place.n_pad)
         if packed.nb_max == 0:
             return state, EpochLog([], 0,
                                    client_steps=[0] * self.n_clients)
         if not hasattr(self, "_epoch_c"):
             self._epoch_c = ENG.make_fl_epoch(self.adapter, self._opt,
-                                              self.privacy)
-        key_idx = ENG.key_index_grid(self, packed)
-        batches = ENG.maybe_shard(packed.batches, self.n_clients,
-                                  self.shard)
+                                              self.privacy, place)
+        key_idx = place.put(ENG.key_index_grid(self, packed))
+        batches = place.put(packed.batches)
         locals_stacked, losses = self._epoch_c(
-            state["params"], batches, packed.mask, packed.ex_weights,
-            key_idx, self._privacy_base_key())
+            state["params"], batches, place.put(packed.mask),
+            place.put(packed.ex_weights), key_idx,
+            self._privacy_base_key())
         if self.privacy is not None and self.privacy.secagg:
-            # secagg masks per-client host uploads: unstack and reuse the
-            # exact stepwise aggregation path
+            # secagg masks per-client host uploads: unstack (real hospitals
+            # only) and reuse the exact stepwise aggregation path
             locals_ = unstack_tree(locals_stacked, self.n_clients)
-            state["params"] = self._aggregate(locals_, packed.n_samples)
+            state["params"] = self._aggregate(
+                locals_, packed.n_samples[:self.n_clients])
         else:
             state["params"] = ENG.stacked_weighted_mean(
                 locals_stacked, np.asarray(packed.n_samples, np.float32))
@@ -115,7 +118,8 @@ class FedAvg(Strategy):
                 self._dp_account(ci, packed.n_samples[ci], batch_size,
                                  count=nb)
         return state, EpochLog(flat, len(flat), weights=loss_w,
-                               client_steps=list(packed.n_batches))
+                               client_steps=list(
+                                   packed.n_batches[:self.n_clients]))
 
     @property
     def _whole_run(self):
@@ -127,16 +131,19 @@ class FedAvg(Strategy):
         from repro.core.strategies import engine as ENG
         if ENG.empty_run(client_data, batch_size, self.drop_remainder):
             return None                        # empty run: per-epoch path
+        place = self.placement
         batches, packed = ENG.pack_run(client_data, batch_size, rng,
-                                       n_epochs, self.drop_remainder)
+                                       n_epochs, self.drop_remainder,
+                                       pad_clients=place.n_pad)
         if not hasattr(self, "_run_c"):
             self._run_c = ENG.make_fl_run(self.adapter, self._opt,
-                                          self.privacy)
+                                          self.privacy, place)
         key_idx = np.stack([ENG.key_index_grid(self, packed)
                             for _ in range(n_epochs)])
         state["params"], losses = self._run_c(
-            state["params"], batches, packed.mask, packed.ex_weights,
-            key_idx, self._privacy_base_key(),
+            state["params"], place.put(batches, axis=1),
+            place.put(packed.mask), place.put(packed.ex_weights),
+            place.put(key_idx, axis=1), self._privacy_base_key(),
             np.asarray(packed.n_samples, np.float32))
         self._run_calls = getattr(self, "_run_calls", 0) + 1
         losses = np.asarray(losses)
@@ -144,7 +151,8 @@ class FedAvg(Strategy):
         for e in range(n_epochs):
             flat, loss_w = ENG.client_major_log(losses[e], packed)
             logs.append(EpochLog(flat, len(flat), weights=loss_w,
-                                 client_steps=list(packed.n_batches)))
+                                 client_steps=list(
+                                     packed.n_batches[:self.n_clients])))
         for ci, nb in enumerate(packed.n_batches):
             if nb:
                 self._dp_account(ci, packed.n_samples[ci], batch_size,

@@ -93,16 +93,26 @@ class SplitLearning(Strategy):
     def _ensure_stacked(self, state):
         """Compiled SL/SFLv2 state keeps the hospital axis stacked BETWEEN
         epochs too — unstacking n_clients x n_leaves every epoch costs more
-        host time than the compiled epoch itself."""
+        host time than the compiled epoch itself.  Under placement the
+        stack is padded to the mesh multiple (phantom rows are copies of
+        the last real client; the schedule never touches them and syncs
+        weight them zero) and placed on the "hosp" mesh."""
         from repro.core.partition import stack_trees
+        place = self.placement
         if "stacked_clients" not in state:
-            state["stacked_clients"] = stack_trees(state.pop("clients"))
-            state["stacked_c_opts"] = stack_trees(state.pop("c_opts"))
+            state["stacked_clients"] = place.pad_tree(
+                stack_trees(state.pop("clients")))
+            state["stacked_c_opts"] = place.pad_tree(
+                stack_trees(state.pop("c_opts")))
+        state["stacked_clients"] = place.put(state["stacked_clients"])
+        state["stacked_c_opts"] = place.put(state["stacked_c_opts"])
 
     def _run_epoch_compiled(self, state, client_data, rng, batch_size):
         from repro.core.strategies import engine as ENG
+        place = self.placement
         packed = ENG.pack_epoch(client_data, batch_size, rng,
-                                self.drop_remainder)
+                                self.drop_remainder,
+                                pad_clients=place.n_pad)
         sched = schedule_array(self.schedule, packed.n_batches)
         if len(sched) == 0:
             self._end_of_epoch(state)        # SFLv2 still syncs clients
@@ -118,13 +128,19 @@ class SplitLearning(Strategy):
         (state["stacked_clients"], state["server"],
          state["stacked_c_opts"], state["s_opt"], losses) = self._epoch_c(
             state["stacked_clients"], state["server"],
-            state["stacked_c_opts"], state["s_opt"], packed.batches,
-            packed.ex_weights, sched, key_idx, self._privacy_base_key())
+            state["stacked_c_opts"], state["s_opt"],
+            place.put(packed.batches), place.put(packed.ex_weights),
+            sched, key_idx, self._privacy_base_key())
         flat, loss_w = ENG.scheduled_log(losses, sched, packed)
+        # the interleave program's output sharding is compiler-chosen:
+        # re-place so between-epoch state is always on the hosp mesh
+        state["stacked_clients"] = place.put(state["stacked_clients"])
+        state["stacked_c_opts"] = place.put(state["stacked_c_opts"])
         self._account_compiled(packed, batch_size)
         self._end_of_epoch(state)
         return state, EpochLog(flat, len(flat), weights=loss_w,
-                               client_steps=list(packed.n_batches))
+                               client_steps=list(
+                                   packed.n_batches[:self.n_clients]))
 
     @property
     def _whole_run(self):
@@ -134,13 +150,17 @@ class SplitLearning(Strategy):
         from repro.core.strategies import engine as ENG
         if ENG.empty_run(client_data, batch_size, self.drop_remainder):
             return None                        # empty run: per-epoch path
+        place = self.placement
         batches, packed = ENG.pack_run(client_data, batch_size, rng,
-                                       n_epochs, self.drop_remainder)
+                                       n_epochs, self.drop_remainder,
+                                       pad_clients=place.n_pad)
         sched = schedule_array(self.schedule, packed.n_batches)
         if not hasattr(self, "_run_c"):
             self._run_c = ENG.make_interleaved_run(
                 self.adapter, self._opt_c, self._opt_s, self.transport,
-                self.privacy, sync_clients=self._sync_stacked)
+                self.privacy, sync_clients=self._sync_stacked,
+                client_weights=(place.client_weights() if place.padded
+                                else None))
         key_idx = np.stack([
             self._take_key_indices(len(sched)) if self._keyed
             else np.zeros((len(sched),), np.uint32)
@@ -149,15 +169,19 @@ class SplitLearning(Strategy):
         (state["stacked_clients"], state["server"],
          state["stacked_c_opts"], state["s_opt"], losses) = self._run_c(
             state["stacked_clients"], state["server"],
-            state["stacked_c_opts"], state["s_opt"], batches,
-            packed.ex_weights, sched, key_idx, self._privacy_base_key())
+            state["stacked_c_opts"], state["s_opt"],
+            place.put(batches, axis=1), place.put(packed.ex_weights),
+            sched, key_idx, self._privacy_base_key())
         self._run_calls = getattr(self, "_run_calls", 0) + 1
+        state["stacked_clients"] = place.put(state["stacked_clients"])
+        state["stacked_c_opts"] = place.put(state["stacked_c_opts"])
         losses = np.asarray(losses)
         logs = []
         for e in range(n_epochs):
             flat, loss_w = ENG.scheduled_log(losses[e], sched, packed)
             logs.append(EpochLog(flat, len(flat), weights=loss_w,
-                                 client_steps=list(packed.n_batches)))
+                                 client_steps=list(
+                                     packed.n_batches[:self.n_clients])))
         self._account_compiled(packed, batch_size, n_epochs)
         return state, logs
 
@@ -187,7 +211,10 @@ class SplitLearning(Strategy):
     def _record_wire_epoch(self, example_batch, n_batches):
         """The analytic->timeline bridge hook: hand the transport this
         epoch's schedule signature so ``wire.simulator`` can expand the
-        summary accounting back into per-step timelines."""
+        summary accounting back into per-step timelines.  Placement
+        phantom rows (zero batches) are sliced off — the recorded
+        signature is placement-independent."""
+        n_batches = list(n_batches)[:self.n_clients]
         if self.transport is None or not sum(n_batches):
             return
         self.transport.record_epoch(self.adapter, example_batch,

@@ -46,8 +46,10 @@ class SplitFedV2(SplitLearning):
     def _end_of_epoch(self, state):
         if "stacked_clients" in state:           # compiled-engine layout
             from repro.core.strategies.engine import stacked_mean_sync
+            place = self.placement
             state["stacked_clients"] = stacked_mean_sync(
-                state["stacked_clients"])
+                state["stacked_clients"],
+                place.client_weights() if place.padded else None)
             return
         avg = tree_mean(state["clients"])
         state["clients"] = [avg for _ in range(self.n_clients)]
@@ -83,6 +85,11 @@ class SplitFedV3(SplitLearning):
             if server is None:
                 server = params["middle"]
         stacked = stack_trees(clients)
+        if self.engine == "compiled":
+            # placement layout: phantom rows (copies of the last real
+            # client) reach the mesh multiple; their batches are zeros and
+            # their weight in every average is zero
+            stacked = self.placement.put(self.placement.pad_tree(stacked))
         return {"stacked_clients": stacked, "server": server,
                 "c_opt": opt_c.init(stacked), "s_opt": opt_s.init(server)}
 
@@ -133,26 +140,30 @@ class SplitFedV3(SplitLearning):
 
     def _run_epoch_compiled(self, state, client_data, rng, batch_size):
         from repro.core.strategies import engine as ENG
-        packed = ENG.pack_epoch(client_data, batch_size, rng, True)
-        self._check_batches(packed.n_batches, batch_size)
+        place = self.placement
+        packed = ENG.pack_epoch(client_data, batch_size, rng, True,
+                                pad_clients=place.n_pad)
+        self._check_batches(packed.n_batches[:self.n_clients], batch_size)
         steps = packed.nb_max
         if not hasattr(self, "_epoch_c"):
             self._epoch_c = ENG.make_sflv3_epoch(
-                self.adapter, self._opt_c, self._opt_s, self.n_clients,
-                self.transport, self.privacy)
-        b_idx = np.stack([[s % nb for nb in packed.n_batches]
+                self.adapter, self._opt_c, self._opt_s, place.c_pad,
+                self.transport, self.privacy,
+                client_weights=(place.client_weights() if place.padded
+                                else None),
+                placement=place)
+        b_idx = np.stack([[s % nb if nb else 0 for nb in packed.n_batches]
                           for s in range(steps)]).astype(np.int32)
         key_idx = (self._take_key_indices(steps) if self._keyed
                    else np.zeros((steps,), np.uint32))
-        batches = ENG.maybe_shard(packed.batches, self.n_clients,
-                                  self.shard)
-        sc = ENG.maybe_shard(state["stacked_clients"], self.n_clients,
-                             self.shard)
+        batches = place.put(packed.batches)
+        sc = place.put(state["stacked_clients"])
+        c_opt = place.put(state["c_opt"])
         (state["stacked_clients"], state["server"], state["c_opt"],
          state["s_opt"], losses) = self._epoch_c(
-            sc, state["server"], state["c_opt"], state["s_opt"], batches,
-            b_idx, key_idx, self._privacy_base_key())
-        flat = np.asarray(losses).reshape(-1).tolist()
+            sc, state["server"], c_opt, state["s_opt"], batches,
+            place.put(b_idx, axis=1), key_idx, self._privacy_base_key())
+        flat = np.asarray(losses)[:, :self.n_clients].reshape(-1).tolist()
         self._account_v3(packed, batch_size)
         self._end_of_epoch(state)
         return state, EpochLog(flat, steps,
@@ -179,27 +190,33 @@ class SplitFedV3(SplitLearning):
 
     def _run_compiled(self, state, client_data, rng, batch_size, n_epochs):
         from repro.core.strategies import engine as ENG
+        place = self.placement
         batches, packed = ENG.pack_run(client_data, batch_size, rng,
-                                       n_epochs, True)
-        self._check_batches(packed.n_batches, batch_size)
+                                       n_epochs, True,
+                                       pad_clients=place.n_pad)
+        self._check_batches(packed.n_batches[:self.n_clients], batch_size)
         steps = packed.nb_max
         if not hasattr(self, "_run3_c"):
             self._run3_c = ENG.make_sflv3_run(
-                self.adapter, self._opt_c, self._opt_s, self.n_clients,
+                self.adapter, self._opt_c, self._opt_s, place.c_pad,
                 self.transport, self.privacy,
-                sync_clients=self._sync_stacked)
-        b_idx = np.stack([[s % nb for nb in packed.n_batches]
+                sync_clients=self._sync_stacked,
+                client_weights=(place.client_weights() if place.padded
+                                else None),
+                placement=place)
+        b_idx = np.stack([[s % nb if nb else 0 for nb in packed.n_batches]
                           for s in range(steps)]).astype(np.int32)
         key_idx = np.stack([
             self._take_key_indices(steps) if self._keyed
             else np.zeros((steps,), np.uint32) for _ in range(n_epochs)])
         (state["stacked_clients"], state["server"], state["c_opt"],
          state["s_opt"], losses) = self._run3_c(
-            state["stacked_clients"], state["server"], state["c_opt"],
-            state["s_opt"], batches, b_idx, key_idx,
+            place.put(state["stacked_clients"]), state["server"],
+            place.put(state["c_opt"]), state["s_opt"],
+            place.put(batches, axis=1), place.put(b_idx, axis=1), key_idx,
             self._privacy_base_key())
         self._run_calls = getattr(self, "_run_calls", 0) + 1
-        losses = np.asarray(losses)
+        losses = np.asarray(losses)[:, :, :self.n_clients]
         logs = [EpochLog(losses[e].reshape(-1).tolist(), steps,
                          client_steps=[steps] * self.n_clients)
                 for e in range(n_epochs)]
@@ -231,5 +248,7 @@ class SplitFedV1(SplitFedV3):
 
     def _end_of_epoch(self, state):
         from repro.core.strategies.engine import stacked_mean_sync
+        place = self.placement
         state["stacked_clients"] = stacked_mean_sync(
-            state["stacked_clients"])
+            state["stacked_clients"],
+            place.client_weights() if place.padded else None)

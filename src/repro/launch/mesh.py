@@ -50,7 +50,10 @@ RULES: dict[str, tuple[str, ...]] = {
     "heads": (),
     "layers": (),                    # scan-stacked layer dim
     "chan": (), "chan_in": (), "classes": (),
-    "clients": ("data",),            # stacked per-client fronts (SFLv3)
+    # stacked per-client (hospital) axes: the dedicated 1-D ("hosp",) mesh
+    # of core.placement when present, else data parallelism on the
+    # production meshes (SFLv3 stacked fronts, engine batch stacks)
+    "clients": ("hosp", "data"),
 }
 
 

@@ -25,6 +25,7 @@ import dataclasses
 import math
 
 import jax
+import jax.numpy as jnp
 
 from repro import optim as O
 
@@ -108,13 +109,36 @@ def per_example_grads(loss_fn, params, batch, keys):
     return jax.vmap(one)(_expand_batch(batch), keys)
 
 
+def example_keys(key, b: int):
+    """(B,) per-example keys as ``fold_in(key, example_idx)``.
+
+    fold_in (unlike ``jax.random.split``, whose draws depend on the split
+    COUNT) gives example ``j`` a key independent of the batch LENGTH — so
+    a pad-and-mask padded batch draws the same noise for its real examples
+    as the stepwise short batch does, which is what makes DP under
+    ``drop_remainder=False`` engine-independent.
+    """
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(
+        jnp.arange(b, dtype=jnp.uint32))
+
+
 def dp_value_and_grad(loss_fn, cfg: PrivacyConfig):
     """DP analogue of ``jax.value_and_grad``.
 
     ``loss_fn(params, batch, key) -> scalar`` (use ``keyed`` to lift a
-    keyless loss).  Returns ``fn(params, batch, key) -> (mean loss, noisy
-    clipped mean grad)``: ``(sum_b clip(g_b) + sigma*C*z) / B`` with
-    ``z ~ N(0, I)`` — the standard Abadi et al. DP-SGD estimator.
+    keyless loss).  Returns ``fn(params, batch, key, weights=None) ->
+    (mean loss, noisy clipped mean grad)``: ``(sum_b clip(g_b) +
+    sigma*C*z) / B`` with ``z ~ N(0, I)`` — the standard Abadi et al.
+    DP-SGD estimator.
+
+    ``weights`` is an optional (B,) 0/1 validity mask (the compiled
+    engine's pad-and-mask rows under ``drop_remainder=False``): weighted
+    per-example clipping scales each per-example gradient by its weight
+    BEFORE the clip — a zero-weight padded example clips to exactly zero
+    contribution — and the mean divides by the REAL example count
+    ``sum(weights)``, so the estimator equals the stepwise short-batch
+    step bit-for-bit (noise included: the noise key and the summed-grad
+    shape do not depend on padding).
     """
     if cfg.use_kernel:
         from repro.kernels.dp_clip.ops import clip_accumulate
@@ -127,16 +151,24 @@ def dp_value_and_grad(loss_fn, cfg: PrivacyConfig):
     noise_std = float(cfg.noise_multiplier) * float(cfg.clip_norm) \
         if cfg.noise_multiplier > 0 else 0.0
 
-    def fn(params, batch, key):
+    def fn(params, batch, key, weights=None):
         b = jax.tree.leaves(batch)[0].shape[0]
         ex_key, noise_key = jax.random.split(key)
         losses, grads = per_example_grads(loss_fn, params, batch,
-                                          jax.random.split(ex_key, b))
+                                          example_keys(ex_key, b))
+        if weights is None:
+            denom, loss = b, losses.mean()
+        else:
+            w = weights.astype(jnp.float32)
+            grads = jax.tree.map(
+                lambda g: g * w.reshape((b,) + (1,) * (g.ndim - 1)), grads)
+            denom = jnp.maximum(w.sum(), 1.0)
+            loss = (losses * w).sum() / denom
         summed, _ = clip_fn(grads)
         summed = O.tree_gaussian_noise(summed, noise_key, noise_std)
-        grad = jax.tree.map(lambda s, p: (s / b).astype(p.dtype),
+        grad = jax.tree.map(lambda s, p: (s / denom).astype(p.dtype),
                             summed, params)
-        return losses.mean(), grad
+        return loss, grad
 
     return fn
 

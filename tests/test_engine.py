@@ -120,6 +120,17 @@ def test_parity_keep_remainder(method, tiny_setup):
     _assert_parity(method, clients, adapter, drop_remainder=False)
 
 
+@pytest.mark.parametrize("method", ["fl", "sl_am"])
+def test_parity_dp_keep_remainder(method, tiny_setup):
+    """DP + drop_remainder=False on the compiled engine: weighted
+    per-example clipping makes padded rows exact no-ops, so the stepwise
+    short-batch DP step (the parity oracle) is matched — losses, params,
+    AND accountant epsilon."""
+    clients, adapter = tiny_setup
+    _assert_parity(method, clients, adapter, privacy=DP,
+                   drop_remainder=False)
+
+
 # ---------------------------------------------------------------------------
 # whole-run programs: Strategy.run(n_epochs) as ONE XLA call
 # ---------------------------------------------------------------------------
@@ -334,9 +345,14 @@ def test_engine_guards(tiny_setup):
     with pytest.raises(ValueError):
         make_strategy("fl", adapter, lambda: O.adam(1e-3), 3,
                       engine="warp")
-    with pytest.raises(ValueError):                 # keyed + partial batches
-        make_strategy("fl", adapter, lambda: O.adam(1e-3), 3, privacy=DP,
-                      engine="compiled", drop_remainder=False)
+    # cut-layer-noise-ONLY draws follow the (padded) batch shape and stay
+    # rejected with partial batches ...
+    with pytest.raises(ValueError):
+        make_strategy("sl_ac", adapter, lambda: O.adam(1e-3), 3,
+                      privacy=CUT, engine="compiled", drop_remainder=False)
+    # ... but DP-SGD is per-example (weighted clipping): allowed
+    make_strategy("fl", adapter, lambda: O.adam(1e-3), 3, privacy=DP,
+                  engine="compiled", drop_remainder=False)
     with pytest.raises(ValueError):                 # batch-synchronous v3
         make_strategy("sflv3_ac", adapter, lambda: O.adam(1e-3), 3,
                       drop_remainder=False)

@@ -1,0 +1,238 @@
+"""Placement subsystem tests.
+
+Two layers:
+
+* in-process (single device): ``Placement`` construction, the
+  pad-to-mesh phantom-hospital contract (``pack_epoch(pad_clients=...)``),
+  and padded-client PARITY — a strategy whose placement is force-padded
+  (mesh-less) must match the unpadded run on params, losses, accountant
+  epsilon, and wire bytes, because phantom hospitals are zero-weight
+  no-ops everywhere.
+* subprocess (8 virtual host devices via ``XLA_FLAGS``): shard=True vs
+  shard=False end-to-end parity for the whole-run programs, plus
+  sharding inspection that the hospital axis really lands on the "hosp"
+  mesh (tests/placement_driver.py).
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro import optim as O
+from repro.core.partition import cnn_adapter
+from repro.core.placement import Placement
+from repro.core.strategies import make_strategy
+from repro.core.strategies.engine import pack_epoch
+from repro.data.synthetic import make_cxr_clients
+from repro.models.cnn import DenseNetConfig, build_densenet
+from repro.privacy import PrivacyConfig
+
+DP = PrivacyConfig(noise_multiplier=1.1, clip_norm=1.0)
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    clients = make_cxr_clients(seed=0, train_per_client=[17, 12, 9],
+                               val_per_client=6, test_per_client=7,
+                               image_size=16, n_clients=3)
+    cfg = DenseNetConfig(growth=4, blocks=(1, 1), stem_ch=8, cut_layer=1)
+    return clients, cnn_adapter(build_densenet(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Placement construction
+# ---------------------------------------------------------------------------
+
+def test_make_single_device_is_noop():
+    p = Placement.make(5, enabled=True, devices=[object()])
+    assert not p.enabled and not p.padded
+    assert p.c_pad == 5 and p.n_pad == 0
+    # put/pad are identities
+    x = np.ones((5, 3))
+    assert p.put(x) is x
+    assert p.pad_tree({"a": x})["a"] is x
+
+
+def test_make_disabled():
+    assert not Placement.make(5, enabled=False).enabled
+
+
+def test_make_pads_to_device_multiple():
+    devs = [object()] * 4
+    p = Placement.make(5, enabled=True, devices=devs)
+    assert p.enabled and p.c_pad == 8 and p.n_pad == 3
+    np.testing.assert_array_equal(p.client_weights(),
+                                  [1, 1, 1, 1, 1, 0, 0, 0])
+    q = Placement.make(8, enabled=True, devices=devs)
+    assert q.c_pad == 8 and not q.padded
+    # fewer hospitals than devices: pad up to one row per device
+    r = Placement.make(3, enabled=True, devices=devs)
+    assert r.c_pad == 4 and r.n_pad == 1
+
+
+def test_pad_tree_modes():
+    p = Placement(n_clients=3, c_pad=5, mesh=None)
+    t = {"w": np.arange(6, dtype=np.float32).reshape(3, 2)}
+    edge = p.pad_tree(t)
+    assert edge["w"].shape == (5, 2)
+    np.testing.assert_array_equal(edge["w"][3], edge["w"][2])
+    zeros = p.pad_tree(t, mode="zeros")
+    np.testing.assert_array_equal(np.asarray(zeros["w"][3:]),
+                                  np.zeros((2, 2)))
+    # non-hospital leaves pass through untouched
+    assert p.pad_tree({"s": np.ones((7,))})["s"].shape == (7,)
+
+
+# ---------------------------------------------------------------------------
+# phantom hospitals in pack_epoch
+# ---------------------------------------------------------------------------
+
+def test_pack_epoch_pad_clients():
+    data = [{"x": np.arange(10, dtype=np.float32)[:, None],
+             "label": np.arange(10)},
+            {"x": np.arange(5, dtype=np.float32)[:, None],
+             "label": np.arange(5)}]
+    plain = pack_epoch(data, 2, np.random.default_rng(3))
+    padded = pack_epoch(data, 2, np.random.default_rng(3), pad_clients=2)
+    assert padded.mask.shape == (4, 5)
+    assert padded.n_batches == [5, 2, 0, 0]
+    assert padded.n_samples == [10, 5, 0, 0]
+    assert padded.step_examples[2:] == [[], []]
+    assert not padded.mask[2:].any()
+    # real rows identical (same rng stream), phantom rows all-zero
+    np.testing.assert_array_equal(padded.batches["x"][:2],
+                                  plain.batches["x"])
+    assert not padded.batches["x"][2:].any()
+    assert padded.total_steps == plain.total_steps
+
+
+# ---------------------------------------------------------------------------
+# padded-client parity (single device, force-padded placement)
+# ---------------------------------------------------------------------------
+
+def _run_padded(method, clients, adapter, c_pad, privacy=None, epochs=2,
+                transport=None, whole_run=False):
+    st = make_strategy(method, adapter, lambda: O.adam(1e-3), len(clients),
+                       privacy=privacy, transport=transport)
+    if c_pad is not None:
+        # force the padding contract without a mesh: every array carries
+        # phantom hospital rows, placement itself stays single-device
+        st.placement = Placement(len(clients), c_pad, None)
+    state = st.setup(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    data = [c.train for c in clients]
+    if whole_run:
+        state, logs = st.run(state, data, rng, 4, epochs)
+        log = logs[-1]
+    else:
+        log = None
+        for _ in range(epochs):
+            state, log = st.run_epoch(state, data, rng, 4)
+    return st, state, log
+
+
+def _assert_padded_invariance(method, clients, adapter, privacy=None,
+                              transport_pair=(None, None),
+                              whole_run=False, atol=1e-5):
+    ta, tb = transport_pair
+    st_a, sa, la = _run_padded(method, clients, adapter, None, privacy,
+                               transport=ta, whole_run=whole_run)
+    st_b, sb, lb = _run_padded(method, clients, adapter,
+                               len(clients) + 2, privacy,
+                               transport=tb, whole_run=whole_run)
+    np.testing.assert_allclose(la.losses, lb.losses, atol=atol)
+    assert la.client_steps == lb.client_steps
+    assert la.weights == lb.weights
+    for i in range(len(clients)):
+        for a, b in zip(jax.tree.leaves(st_a.params_for_eval(sa, i)),
+                        jax.tree.leaves(st_b.params_for_eval(sb, i))):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       atol=atol)
+    ra, rb = st_a.privacy_report(), st_b.privacy_report()
+    assert len(ra) == len(rb)
+    for x, y in zip(ra, rb):
+        assert x["steps"] == y["steps"]
+        assert abs(x["epsilon"] - y["epsilon"]) < 1e-9
+    if ta is not None:
+        assert (ta.steps, ta.bytes_on_wire) == (tb.steps, tb.bytes_on_wire)
+
+
+@pytest.mark.parametrize("method", ["fl", "sflv2_ac", "sflv3_ac"])
+def test_phantom_hospital_invariance(method, tiny_setup):
+    """Adding zero-weight phantom hospitals changes nothing: params,
+    losses, logs — the padding contract the mesh placement relies on."""
+    clients, adapter = tiny_setup
+    _assert_padded_invariance(method, clients, adapter)
+
+
+@pytest.mark.parametrize("method", ["fl", "sflv3_ac"])
+def test_phantom_invariance_dp(method, tiny_setup):
+    """Phantom hospitals draw no DP noise for real hospitals (fold_in
+    per-client/per-example keys) and compose no accountant steps."""
+    clients, adapter = tiny_setup
+    _assert_padded_invariance(method, clients, adapter, privacy=DP)
+
+
+def test_phantom_invariance_wire_bytes(tiny_setup):
+    """Wire byte meters and recorded epoch signatures ignore phantoms."""
+    from repro.wire import Transport
+    clients, adapter = tiny_setup
+    ta, tb = Transport("identity"), Transport("identity")
+    _assert_padded_invariance("sl_am", clients, adapter,
+                              transport_pair=(ta, tb))
+    assert ta.bytes_on_wire > 0
+
+
+@pytest.mark.parametrize("method", ["fl", "sflv2_ac", "sflv3_ac"])
+def test_phantom_invariance_whole_run(method, tiny_setup):
+    """The [E, C, NB, ...] whole-run programs honor the same contract."""
+    clients, adapter = tiny_setup
+    _assert_padded_invariance(method, clients, adapter, whole_run=True)
+
+
+def test_padded_eval_matches(tiny_setup):
+    """scores_all with a padded hospital axis returns identical scores."""
+    clients, adapter = tiny_setup
+    st_a, sa, _ = _run_padded("sflv3_ac", clients, adapter, None, epochs=1)
+    st_b, sb, _ = _run_padded("sflv3_ac", clients, adapter, 5, epochs=1)
+    datas = [c.test for c in clients]
+    for x, y in zip(st_a.scores_all(sa, datas, batch_size=4),
+                    st_b.scores_all(sb, datas, batch_size=4)):
+        np.testing.assert_allclose(x, y, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# real multi-device placement (8 virtual host devices, subprocess)
+# ---------------------------------------------------------------------------
+
+def _run_driver(args, timeout=1200):
+    out = subprocess.run(
+        [sys.executable, os.path.join(os.path.dirname(__file__),
+                                      "placement_driver.py"), *args],
+        capture_output=True, text=True, timeout=timeout,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")})
+    assert "PLACEMENT_OK" in out.stdout, (out.stdout[-2000:]
+                                          + out.stderr[-2000:])
+    return out.stdout
+
+
+def test_sharded_parity_padded_subprocess():
+    """n_clients=5 on 8 virtual devices (3 phantoms): shard=True matches
+    shard=False ≤1e-5 (params/losses/eps/wire bytes) and the hospital
+    axis is really placed on the "hosp" mesh."""
+    out = _run_driver(["--methods", "fl,sl_am,sflv3_ac", "--clients", "5"])
+    assert "sharding hosp" in out
+
+
+@pytest.mark.slow
+def test_sharded_parity_full_grid_subprocess():
+    """Every method of the paper grid, even and padded hospital counts."""
+    _run_driver(["--methods", "fl,sl_am,sflv2_ac,sflv3_ac,sflv1_ac",
+                 "--clients", "8,5"], timeout=2400)
