@@ -10,13 +10,20 @@ second column times ``Strategy.run(n_epochs=RUN_EPOCHS)`` — the compiled
 engine executes the whole run as ONE XLA program, the stepwise engine as
 a per-epoch loop.
 
+A telemetry column runs each compiled whole-run twice — with and without
+the full ``repro.obs.Telemetry`` tap spec — and records the steady-state
+overhead the extra scan outputs cost; with ``--check-against`` the
+overhead must stay under ``--max-telemetry-overhead`` (default 5%).
+
 Writes ``benchmarks/results/BENCH_engine.json``:
 
     {"results": [{"method", "n_clients", "engine", "mode",
                   "steps_per_epoch", "epoch_seconds", "steps_per_sec"},
-                 ...],
+                 ...],                  # run3 rows add compile_seconds,
+                                        # dispatches_per_run, observed
      "speedup": {"fl@10": 7.3,          # compiled / stepwise, one epoch
-                 "fl@10:run3": 9.1}}    # whole 3-epoch run
+                 "fl@10:run3": 9.1},    # whole 3-epoch run
+     "telemetry_overhead": {"fl@10": 0.012}}
 
 ``--shard`` additionally times the compiled engine with
 ``make_strategy(..., shard=True)`` — the hospital axis placed on the
@@ -102,15 +109,22 @@ def time_engine(method, engine, clients, adapter, batch_size, epochs,
 
 
 def time_whole_run(method, engine, clients, adapter, batch_size,
-                   run_epochs, reps, shard=False):
+                   run_epochs, reps, shard=False, observe=False):
     """Time ``Strategy.run(n_epochs=run_epochs)`` — ONE program under the
-    compiled engine, a per-epoch loop under stepwise."""
+    compiled engine, a per-epoch loop under stepwise.  ``observe=True``
+    runs with the full telemetry spec (repro.obs) — the taps ride the
+    run scan as extra outputs, so the steady-state cost they add is what
+    the telemetry-overhead gate measures."""
+    from repro.obs import Telemetry
     strat = make_strategy(method, adapter, lambda: O.adam(1e-3),
-                          len(clients), engine=engine, shard=shard)
+                          len(clients), engine=engine, shard=shard,
+                          observe=Telemetry() if observe else None)
     state = strat.setup(jax.random.key(0))
     rng = np.random.default_rng(0)
     data = [c.train for c in clients]
+    t0 = time.perf_counter()
     state, logs = strat.run(state, data, rng, batch_size, run_epochs)
+    first_call = time.perf_counter() - t0        # trace+compile dominated
     times = []
     for _ in range(reps):
         jax.block_until_ready(jax.tree.leaves(
@@ -123,9 +137,28 @@ def time_whole_run(method, engine, clients, adapter, batch_size,
     sec = float(np.median(times))
     steps = sum(l.steps for l in logs)
     return {"method": method, "n_clients": len(clients), "engine": engine,
-            "mode": f"run{run_epochs}", "shard": bool(shard),
+            "mode": f"run{run_epochs}" + (":obs" if observe else ""),
+            "shard": bool(shard), "observed": bool(observe),
             "steps_per_epoch": steps, "epoch_seconds": sec,
+            "compile_seconds": first_call - sec,
+            "dispatches_per_run": strat._dispatches // (reps + 1),
             "steps_per_sec": steps / sec if sec > 0 else float("inf")}
+
+
+def check_telemetry_overhead(overhead: dict,
+                             max_overhead: float = 0.05) -> list[str]:
+    """Gate the steady-state cost of telemetry: an observed run's steps/s
+    within ``max_overhead`` of the unobserved run's (the taps are extra
+    scan outputs, not extra dispatches — >5% means something regressed
+    into the hot path)."""
+    failures = []
+    for key, ov in overhead.items():
+        status = "OK" if ov <= max_overhead else "REGRESSED"
+        print(f"  telemetry {key:16s} overhead {ov * 100:6.2f}% "
+              f"(max {max_overhead * 100:.0f}%)  {status}")
+        if ov > max_overhead:
+            failures.append(key)
+    return failures
 
 
 def check_against(baseline_path: str, speedup: dict,
@@ -163,7 +196,12 @@ def main():
     ap.add_argument("--out", default=OUT)
     ap.add_argument("--check-against", default=None,
                     help="committed BENCH_engine.json to gate speedups "
-                         "against (fail on >20%% regression)")
+                         "against (fail on >20%% regression); also gates "
+                         "telemetry overhead")
+    ap.add_argument("--max-telemetry-overhead", type=float, default=0.05,
+                    help="fail when an observed compiled run's steady-"
+                         "state steps/s falls more than this fraction "
+                         "below the unobserved run's")
     ap.add_argument("--shard", action="store_true",
                     help="also time the compiled engine with shard=True "
                          "(hospital axis on the hosp device mesh; run "
@@ -184,10 +222,35 @@ def main():
     # hosp mesh; the stepwise baseline never shards, so the ':shard'
     # speedup key gates the SHARDED compiled path against the same oracle
     shard_grid = [False] + ([True] if args.shard else [])
-    results, speedup = [], {}
+    results, speedup, overhead = [], {}, {}
     for n in clients_grid:
         clients, adapter = build_setup(n, tpc, image_size=8)
+        # telemetry overhead needs enough steps per run to amortize the
+        # fixed metric-stack readback (a realistic run has hundreds of
+        # steps; the smoke grid's ~10 would gate host-transfer latency,
+        # not the taps' marginal cost)
+        tel_tpc = max(tpc, 96)
+        tel_clients, tel_adapter = ((clients, adapter) if tel_tpc == tpc
+                                    else build_setup(n, tel_tpc,
+                                                     image_size=8))
         for method in methods:
+            # telemetry overhead: compiled whole-run with and without the
+            # full tap spec — same program shape, extra scan outputs only
+            plain = time_whole_run(method, "compiled", tel_clients,
+                                   tel_adapter, args.batch,
+                                   args.run_epochs, epochs)
+            obs = time_whole_run(method, "compiled", tel_clients,
+                                 tel_adapter, args.batch, args.run_epochs,
+                                 epochs, observe=True)
+            results.append(obs)     # the plain run3 row rides the grid below
+            ov = plain["steps_per_sec"] / max(obs["steps_per_sec"],
+                                              1e-9) - 1.0
+            overhead[f"{method}@{n}"] = round(max(ov, 0.0), 4)
+            print(f"{method:10s} n={n:3d} telemetry "
+                  f"{obs['steps_per_sec']:9.1f} vs "
+                  f"{plain['steps_per_sec']:9.1f} steps/s "
+                  f"({max(ov, 0.0) * 100:5.2f}% overhead, "
+                  f"{obs['dispatches_per_run']} dispatch/run)")
             for mode_fn, tag in (
                     (lambda m, e, sh: time_engine(m, e, clients, adapter,
                                                   args.batch, epochs,
@@ -219,7 +282,8 @@ def main():
            "n_devices": jax.device_count(),
            "batch_size": args.batch, "train_per_client": tpc,
            "epochs_timed": epochs, "run_epochs": args.run_epochs,
-           "results": results, "speedup": speedup}
+           "results": results, "speedup": speedup,
+           "telemetry_overhead": overhead}
     out_dir = os.path.dirname(args.out)
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)
@@ -234,6 +298,15 @@ def main():
                   f"for {failures}")
             sys.exit(1)
         print("speedup gate OK (within 20% of committed baseline)")
+        tel_failures = check_telemetry_overhead(overhead,
+                                                args.max_telemetry_overhead)
+        if tel_failures:
+            print(f"FAIL: telemetry overhead above "
+                  f"{args.max_telemetry_overhead * 100:.0f}% for "
+                  f"{tel_failures}")
+            sys.exit(1)
+        print("telemetry overhead gate OK "
+              f"(<={args.max_telemetry_overhead * 100:.0f}%)")
 
 
 if __name__ == "__main__":

@@ -15,6 +15,7 @@ from repro.core.partition import cnn_adapter
 from repro.core.strategies import make_strategy
 from repro.data.synthetic import make_cxr_clients
 from repro.models.cnn import DenseNetConfig, build_densenet
+from repro.obs import Telemetry
 
 
 def main():
@@ -28,9 +29,12 @@ def main():
         adapter = cnn_adapter(build_densenet(cfg))
         # the default compiled engine lowers the WHOLE 4-epoch run into
         # one XLA program via strat.run (engine="stepwise" is the legacy
-        # per-batch host loop; both train identically)
+        # per-batch host loop; both train identically).  observe= taps
+        # per-round telemetry (grad/update norms, cut-layer activation
+        # stats) inside that one program — params stay bit-identical.
         strat = make_strategy(method, adapter, lambda: O.adam(3e-4),
-                              n_clients=len(clients))
+                              n_clients=len(clients),
+                              observe=Telemetry())
         state = strat.setup(jax.random.key(0))
         rng = np.random.default_rng(0)
         t0 = time.time()
@@ -38,6 +42,9 @@ def main():
                                 batch_size=16, n_epochs=4)
         for epoch, log in enumerate(logs):
             print(f"[{method}] epoch {epoch}: loss={log.mean_loss:.4f}")
+        print(f"[{method}] per-round telemetry "
+              "(hospital means; see repro.obs):")
+        print(strat.last_run_telemetry.table())
         metrics = strat.evaluate(state, clients, "test", batch_size=32)
         print(f"[{method}] test {metrics}  ({time.time() - t0:.0f}s)\n")
 

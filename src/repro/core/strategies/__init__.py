@@ -9,7 +9,7 @@ from repro.core.strategies.splitfed import SplitFedV1, SplitFedV2, SplitFedV3
 
 def make_strategy(method: str, adapter, opt_factory, n_clients,
                   transport=None, privacy=None, engine="compiled",
-                  drop_remainder=True, shard=False):
+                  drop_remainder=True, shard=False, observe=None):
     """method: centralized | fl | sl_{ac,am} | sflv{1,2,3}_{ac,am}.
 
     ``transport`` (repro.wire.Transport) compresses the cut-layer link of
@@ -34,9 +34,16 @@ def make_strategy(method: str, adapter, opt_factory, n_clients,
     hospitals, so any ``n_clients`` runs on any device count with results
     identical to ``shard=False`` (≤1e-5; no-op on one device or under the
     stepwise oracle).
+
+    ``observe`` (repro.obs.Telemetry, or True for the default spec) taps
+    per-round x per-hospital metrics — train loss, grad/update norms,
+    FedAvg update cosine, cut-layer activation stats, DP clip fraction —
+    inside the compiled programs as extra scan outputs: the whole run
+    stays ONE dispatch and params are bit-identical to ``observe=None``.
+    Results land on ``strategy.last_run_telemetry``.
     """
     kw = dict(privacy=privacy, engine=engine,
-              drop_remainder=drop_remainder, shard=shard)
+              drop_remainder=drop_remainder, shard=shard, observe=observe)
     if method in ("centralized", "fl"):
         if transport is not None:
             raise ValueError(f"{method} has no cut-layer link for a "

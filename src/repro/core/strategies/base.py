@@ -52,6 +52,9 @@ class EpochLog:
     steps: int
     weights: list | None = None
     client_steps: list[int] | None = None
+    # repro.obs.telemetry.RoundTelemetry when the epoch ran observed
+    # (typed loosely so the strategy layer never hard-imports repro.obs)
+    telemetry: object = None
 
     @property
     def mean_loss(self):
@@ -98,9 +101,13 @@ class Strategy:
     # batched scorer keeps ONE param copy instead of an n_clients stack
     shared_eval_params: bool = False
 
+    # centralized overrides: epsilon series composes at the pooled rate
+    _eps_pooled: bool = False
+
     def __init__(self, adapter: SplitAdapter, opt_factory: Callable[[], O.Optimizer],
                  n_clients: int, privacy=None, engine: str = "compiled",
-                 drop_remainder: bool = True, shard: bool = False):
+                 drop_remainder: bool = True, shard: bool = False,
+                 observe=None):
         if engine not in ("stepwise", "compiled"):
             raise ValueError(f"unknown engine {engine!r}")
         self.adapter = adapter
@@ -117,18 +124,14 @@ class Strategy:
             n_clients, enabled=shard and engine == "compiled")
         self._accountants = None
         self._key_step = 0
-        if (engine == "compiled" and not drop_remainder
-                and privacy is not None and privacy.cut_noise_std > 0
-                and not privacy.dp_enabled):
-            # DP-SGD is per-example (weighted clipping makes padded rows
-            # exact no-ops), but batch-level cut-layer noise draws depend
-            # on the batch SHAPE — a padded remainder batch cannot
-            # reproduce the stepwise short-batch draw
-            raise ValueError(
-                "compiled engine with drop_remainder=False cannot "
-                "reproduce cut-layer-noise-only draws on partial batches "
-                "(noise shape follows the padded batch); use "
-                "drop_remainder=True or enable DP-SGD clipping")
+        # observability (repro.obs): metric-tap spec, span tracer, and the
+        # training-program dispatch counter — all inert when unused
+        from repro.obs.telemetry import as_telemetry
+        self.observe = as_telemetry(observe)
+        self._tel_active = self.observe
+        self._tracer = None
+        self._dispatches = 0
+        self.last_run_telemetry = None
 
     # -- to implement ---------------------------------------------------------
     def setup(self, key):
@@ -150,7 +153,8 @@ class Strategy:
     def _run_compiled(self, state, client_data, rng, batch_size, n_epochs):
         raise NotImplementedError
 
-    def run(self, state, client_data, rng, batch_size, n_epochs):
+    def run(self, state, client_data, rng, batch_size, n_epochs,
+            observe=None):
         """Train ``n_epochs`` epochs/rounds; returns ``(state, logs)`` with
         one ``EpochLog`` per epoch.
 
@@ -162,19 +166,104 @@ class Strategy:
         masked uploads) and the stepwise engine fall back to a per-epoch
         loop; both orders consume ``rng`` and the PRNG step counter
         identically, so results match the fused path to float round-off.
+
+        ``observe`` (repro.obs.Telemetry | True | False | None) overrides
+        the constructor's telemetry spec for this run: the metric taps
+        ride the scans as extra outputs — the whole run stays ONE dispatch
+        and params are bit-identical to an unobserved run — and the
+        reduced per-round telemetry lands on each ``EpochLog.telemetry``
+        plus ``self.last_run_telemetry``.  ``None`` inherits the
+        constructor setting; ``False`` disables for this run.
         """
         if n_epochs <= 0:
             return state, []
-        if self.engine == "compiled" and self._whole_run:
-            out = self._run_compiled(state, client_data, rng, batch_size,
-                                     n_epochs)
-            if out is not None:          # None: degenerate run, fall back
-                return out
-        logs = []
-        for _ in range(n_epochs):
-            state, log = self.run_epoch(state, client_data, rng, batch_size)
-            logs.append(log)
-        return state, logs
+        from repro.obs.telemetry import as_telemetry
+        if observe is None:
+            tel = self.observe
+        else:
+            tel = None if observe is False else as_telemetry(observe)
+        prev = self._tel_active
+        self._tel_active = tel
+        try:
+            with self._span("run", strategy=self.name, n_epochs=n_epochs):
+                if self.engine == "compiled" and self._whole_run:
+                    out = self._run_compiled(state, client_data, rng,
+                                             batch_size, n_epochs)
+                    if out is not None:  # None: degenerate run, fall back
+                        state, logs = out
+                        return state, self._finish_run(client_data,
+                                                       batch_size, logs)
+                logs = []
+                for i in range(n_epochs):
+                    with self._span(f"round {i}"):
+                        state, log = self.run_epoch(state, client_data,
+                                                    rng, batch_size)
+                    logs.append(log)
+                return state, self._finish_run(client_data, batch_size,
+                                               logs)
+        finally:
+            self._tel_active = prev
+
+    def _finish_run(self, client_data, batch_size, logs):
+        """Assemble ``last_run_telemetry`` (one RoundTelemetry per epoch
+        plus the per-round cumulative RDP epsilon series) from the logs an
+        observed run produced."""
+        tel = self._tel_active
+        if tel is None:
+            self.last_run_telemetry = None
+            return logs
+        from repro.obs import telemetry as T
+        rounds = []
+        for i, log in enumerate(logs):
+            r = log.telemetry
+            if r is None:
+                r = T.RoundTelemetry(i, {})
+                log.telemetry = r
+            r.round_index = i
+            rounds.append(r)
+        if tel.epsilon and self._dp:
+            ns = [len(d["label"]) for d in client_data]
+            eps = T.epsilon_rounds(self.privacy, logs, ns, batch_size,
+                                   pooled=self._eps_pooled)
+            if eps is not None:
+                for r, e in zip(rounds, eps):
+                    r.epsilon = e
+        self.last_run_telemetry = T.RunTelemetry(self.name, self.n_clients,
+                                                 rounds)
+        return logs
+
+    # -- observability plumbing (repro.obs) -----------------------------------
+    @property
+    def _tel(self):
+        """The active Telemetry spec (run() override or the constructor's)."""
+        return self._tel_active
+
+    def attach_tracer(self, tracer):
+        """Attach a ``repro.obs.trace.Tracer`` — host-side phases (pack /
+        dispatch / collect / rounds) get recorded as spans."""
+        self._tracer = tracer
+        return tracer
+
+    def _span(self, name, **args):
+        if self._tracer is None:
+            import contextlib
+            return contextlib.nullcontext()
+        return self._tracer.span(name, **args)
+
+    def _count_dispatch(self, n: int = 1):
+        """Tally one host->device training-program invocation (a compiled
+        epoch/run call or a stepwise per-batch step)."""
+        self._dispatches += n
+
+    def _get_obs(self, attr, tel, build):
+        """Cache an observed (telemetry-variant) compiled program under
+        ``attr``, keyed on the Telemetry spec — separate from the
+        unobserved caches so enabling telemetry never evicts them."""
+        cache = getattr(self, attr, None)
+        if cache is None or cache[0] != tel:
+            cache = (tel, build())
+            setattr(self, attr, cache)
+        return cache[1]
 
     # -- privacy plumbing -----------------------------------------------------
     @property
@@ -355,16 +444,47 @@ class Strategy:
 # and the compiled engine's scan bodies (repro.core.strategies.engine)
 # ---------------------------------------------------------------------------
 
-def full_step_fn(adapter: SplitAdapter, opt: O.Optimizer, privacy=None):
+def full_step_fn(adapter: SplitAdapter, opt: O.Optimizer, privacy=None,
+                 telemetry=None):
     """Pure step over ALL segments jointly (centralized / FL local).
 
     Returns ``(step, keyed)`` with
     ``step(params, opt_state, batch, key=None, weights=None)``; ``key`` is
     consumed only when ``keyed`` (DP-SGD), ``weights`` are per-example
     pad-mask weights (None == plain batch mean; unsupported under DP).
+
+    With a ``telemetry`` spec (repro.obs.Telemetry) the step returns one
+    extra trailing dict of float32 scalar metric taps (static key set from
+    ``telemetry.step_keys``) computed from intermediates the step already
+    has — no extra PRNG draws, no reordered math, so params stay
+    bit-identical to the unobserved step.
     """
-    if privacy is not None and privacy.dp_enabled:
+    dp = privacy is not None and privacy.dp_enabled
+    if dp:
         from repro.privacy.dpsgd import dp_value_and_grad, keyed
+
+        if telemetry is not None:
+            from repro.obs import telemetry as T
+            keys = telemetry.step_keys(dp=True, cut=False)
+            vg = dp_value_and_grad(keyed(adapter.full_loss), privacy,
+                                   with_norms="clip_frac" in keys)
+
+            def dp_step_obs(params, opt_state, batch, key=None,
+                            weights=None):
+                out = vg(params, batch, key, weights)
+                loss, grads = out[0], out[1]
+                updates, opt_state = opt.update(grads, opt_state, params)
+                met = {}
+                if "grad_norm" in keys:
+                    met["grad_norm"] = T.global_norm(grads)
+                    met["update_norm"] = T.global_norm(updates)
+                if "clip_frac" in keys:
+                    met["clip_frac"] = T.clip_fraction(
+                        out[2]["norms"], privacy.clip_norm, weights)
+                return (O.apply_updates(params, updates), opt_state, loss,
+                        met)
+            return dp_step_obs, True
+
         vg = dp_value_and_grad(keyed(adapter.full_loss), privacy)
 
         def dp_step(params, opt_state, batch, key=None, weights=None):
@@ -376,6 +496,22 @@ def full_step_fn(adapter: SplitAdapter, opt: O.Optimizer, privacy=None):
             return O.apply_updates(params, updates), opt_state, loss
         return dp_step, True
 
+    if telemetry is not None:
+        from repro.obs import telemetry as T
+        keys = telemetry.step_keys(dp=False, cut=False)
+
+        def step_obs(params, opt_state, batch, key=None, weights=None):
+            loss, grads = jax.value_and_grad(
+                lambda p: adapter.full_loss(p, batch,
+                                            weights=weights))(params)
+            updates, opt_state = opt.update(grads, opt_state, params)
+            met = {}
+            if "grad_norm" in keys:
+                met["grad_norm"] = T.global_norm(grads)
+                met["update_norm"] = T.global_norm(updates)
+            return O.apply_updates(params, updates), opt_state, loss, met
+        return step_obs, False
+
     def step(params, opt_state, batch, key=None, weights=None):
         loss, grads = jax.value_and_grad(
             lambda p: adapter.full_loss(p, batch, weights=weights))(params)
@@ -385,7 +521,8 @@ def full_step_fn(adapter: SplitAdapter, opt: O.Optimizer, privacy=None):
 
 
 def split_step_fn(adapter: SplitAdapter, opt_client: O.Optimizer,
-                  opt_server: O.Optimizer, transport=None, privacy=None):
+                  opt_server: O.Optimizer, transport=None, privacy=None,
+                  telemetry=None):
     """Pure SL/SFLv2 step: joint grad through client_i(+tail_i) and server.
 
     Numerically identical to the paper's two-hop backprop; the hop itself is
@@ -397,15 +534,96 @@ def split_step_fn(adapter: SplitAdapter, opt_client: O.Optimizer,
     c_opt, s_opt, batch, key=None, weights=None)``.  A privacy config makes
     the step keyed: DP-SGD clips/noises the JOINT (client, server)
     per-example gradient, and/or Gaussian cut-layer noise rides on the
-    boundary after the codec.
+    boundary after the codec.  Cut-layer noise draws are per-example
+    (``repro.privacy.dpsgd.cut_noise_boundary``), so a pad-and-mask padded
+    remainder batch (``weights``) noises its real rows exactly as the
+    stepwise short batch — padded rows get zero noise and zero loss weight.
+
+    With a ``telemetry`` spec the step returns one extra trailing metric
+    dict; cut-layer payload stats observe the FIRST boundary crossing
+    (front->middle — the cut) exactly as it ships: post-codec, post-noise.
+    Observation never draws keys or reorders the update math.
     """
     nls = adapter.nls
     base_boundary = transport.boundary if transport is not None else None
     priv = (privacy if privacy is not None and
             (privacy.dp_enabled or privacy.cut_noise_std > 0) else None)
+    if telemetry is not None:
+        from repro.obs import telemetry as T
+        keys = telemetry.step_keys(
+            dp=priv is not None and priv.dp_enabled, cut=True)
+        want_cut = "cut_mean" in keys
+        want_clip = "clip_frac" in keys
+        want_norms = "grad_norm" in keys
 
     if priv is not None:
         from repro.privacy.dpsgd import boundary_with_key, dp_value_and_grad
+
+        if telemetry is not None:
+            def dp_step_obs(client_params, server_params, c_opt, s_opt,
+                            batch, key=None, weights=None):
+                both0 = {"c": client_params, "s": server_params}
+                met = {}
+                if priv.dp_enabled:
+                    def loss_fn(both, b, k):
+                        params = {"front": both["c"]["front"],
+                                  "middle": both["s"]}
+                        if nls:
+                            params["tail"] = both["c"]["tail"]
+                        sink = []
+                        bnd = boundary_with_key(base_boundary, priv, k)
+                        if want_cut:
+                            bnd = T.observing_boundary(bnd, sink)
+                        loss = adapter.full_loss(params, b, boundary=bnd)
+                        if want_cut:
+                            return loss, T.payload_moments(sink[0])
+                        return loss
+
+                    out = dp_value_and_grad(
+                        loss_fn, priv, has_aux=want_cut,
+                        with_norms=want_clip)(both0, batch, key, weights)
+                    loss, g = out[0], out[1]
+                    extras = out[2] if (want_cut or want_clip) else {}
+                    if want_cut:
+                        met.update(T.moments_to_stats(
+                            *T.combine_moments(*extras["aux"], weights)))
+                    if want_clip:
+                        met["clip_frac"] = T.clip_fraction(
+                            extras["norms"], priv.clip_norm, weights)
+                else:
+                    def loss_fn(both, b, k):
+                        params = {"front": both["c"]["front"],
+                                  "middle": both["s"]}
+                        if nls:
+                            params["tail"] = both["c"]["tail"]
+                        sink = []
+                        bnd = boundary_with_key(base_boundary, priv, k,
+                                                weights)
+                        if want_cut:
+                            bnd = T.observing_boundary(bnd, sink)
+                        loss = adapter.full_loss(params, b, boundary=bnd,
+                                                 weights=weights)
+                        if want_cut:
+                            return loss, T.payload_moments(sink[0],
+                                                           weights)
+                        return loss
+
+                    if want_cut:
+                        (loss, mom), g = jax.value_and_grad(
+                            loss_fn, has_aux=True)(both0, batch, key)
+                        met.update(T.moments_to_stats(*mom))
+                    else:
+                        loss, g = jax.value_and_grad(loss_fn)(both0, batch,
+                                                              key)
+                cu, c_opt = opt_client.update(g["c"], c_opt, client_params)
+                su, s_opt = opt_server.update(g["s"], s_opt, server_params)
+                if want_norms:
+                    met["grad_norm"] = T.global_norm(g)
+                    met["update_norm"] = T.global_norm((cu, su))
+                return (O.apply_updates(client_params, cu),
+                        O.apply_updates(server_params, su), c_opt, s_opt,
+                        loss, met)
+            return dp_step_obs, True
 
         def dp_step(client_params, server_params, c_opt, s_opt, batch,
                     key=None, weights=None):
@@ -417,7 +635,9 @@ def split_step_fn(adapter: SplitAdapter, opt_client: O.Optimizer,
                 # per-example grads, so the inner loss stays per-example
                 return adapter.full_loss(
                     params, b,
-                    boundary=boundary_with_key(base_boundary, priv, k),
+                    boundary=boundary_with_key(
+                        base_boundary, priv, k,
+                        None if priv.dp_enabled else weights),
                     weights=None if priv.dp_enabled else weights)
 
             if priv.dp_enabled:
@@ -432,6 +652,42 @@ def split_step_fn(adapter: SplitAdapter, opt_client: O.Optimizer,
             return (O.apply_updates(client_params, cu),
                     O.apply_updates(server_params, su), c_opt, s_opt, loss)
         return dp_step, True
+
+    if telemetry is not None:
+        def step_obs(client_params, server_params, c_opt, s_opt, batch,
+                     key=None, weights=None):
+            def loss_fn(cp, sp):
+                params = {"front": cp["front"], "middle": sp}
+                if nls:
+                    params["tail"] = cp["tail"]
+                sink = []
+                bnd = (T.observing_boundary(base_boundary, sink)
+                       if want_cut else base_boundary)
+                loss = adapter.full_loss(params, batch, boundary=bnd,
+                                         weights=weights)
+                if want_cut:
+                    return loss, T.payload_moments(sink[0], weights)
+                return loss
+
+            if want_cut:
+                (loss, mom), (gc, gs) = jax.value_and_grad(
+                    loss_fn, argnums=(0, 1), has_aux=True)(client_params,
+                                                           server_params)
+            else:
+                loss, (gc, gs) = jax.value_and_grad(
+                    loss_fn, argnums=(0, 1))(client_params, server_params)
+            cu, c_opt = opt_client.update(gc, c_opt, client_params)
+            su, s_opt = opt_server.update(gs, s_opt, server_params)
+            met = {}
+            if want_cut:
+                met.update(T.moments_to_stats(*mom))
+            if want_norms:
+                met["grad_norm"] = T.global_norm((gc, gs))
+                met["update_norm"] = T.global_norm((cu, su))
+            return (O.apply_updates(client_params, cu),
+                    O.apply_updates(server_params, su), c_opt, s_opt, loss,
+                    met)
+        return step_obs, False
 
     def step(client_params, server_params, c_opt, s_opt, batch, key=None,
              weights=None):
@@ -453,7 +709,8 @@ def split_step_fn(adapter: SplitAdapter, opt_client: O.Optimizer,
 
 def sflv3_step_fn(adapter: SplitAdapter, opt_client: O.Optimizer,
                   opt_server: O.Optimizer, n_clients: int, transport=None,
-                  privacy=None, client_weights=None, mesh_axis=None):
+                  privacy=None, client_weights=None, mesh_axis=None,
+                  telemetry=None):
     """Pure SplitFedv3 step (paper Algorithm 1, batch-synchronous form):
     clients run in parallel (vmap over the stacked client axis); the server
     segment is updated once with the weighted average of per-client server
@@ -477,12 +734,24 @@ def sflv3_step_fn(adapter: SplitAdapter, opt_client: O.Optimizer,
     real hospital's draws do not depend on how many padding rows ride
     along) before the server averages, so each hospital's DP guarantee
     stands on its own.
+
+    With a ``telemetry`` spec the step returns one extra trailing metric
+    dict of per-client ``[n_clients]`` float32 taps (cut-layer payload
+    stats, joint client+server grad/update norms, DP clip fractions) —
+    pure observation of intermediates, params stay bit-identical.
     """
     import jax.numpy as jnp
     nls = adapter.nls
     boundary = transport.boundary if transport is not None else None
     priv = (privacy if privacy is not None and
             (privacy.dp_enabled or privacy.cut_noise_std > 0) else None)
+    if telemetry is not None:
+        from repro.obs import telemetry as T
+        tel_keys = telemetry.step_keys(
+            dp=priv is not None and priv.dp_enabled, cut=True)
+        want_cut = "cut_mean" in tel_keys
+        want_clip = "clip_frac" in tel_keys
+        want_norms = "grad_norm" in tel_keys
     w_global = (np.ones((n_clients,), np.float32)
                 if client_weights is None
                 else np.asarray(client_weights, np.float32))
@@ -503,6 +772,72 @@ def sflv3_step_fn(adapter: SplitAdapter, opt_client: O.Optimizer,
 
     if priv is not None:
         from repro.privacy.dpsgd import boundary_with_key, dp_value_and_grad
+
+        if telemetry is not None:
+            def dp_step_obs(stacked_clients, server_params, c_opt, s_opt,
+                            stacked_batch, key=None):
+                off, w_local = _local_rows()
+                keys = jax.vmap(lambda c: jax.random.fold_in(key, c))(
+                    (off + jnp.arange(n_clients)).astype(jnp.uint32))
+
+                def loss_fn(both, b, k):
+                    params = {"front": both["c"]["front"],
+                              "middle": both["s"]}
+                    if nls:
+                        params["tail"] = both["c"]["tail"]
+                    sink = []
+                    bnd = boundary_with_key(boundary, priv, k)
+                    if want_cut:
+                        bnd = T.observing_boundary(bnd, sink)
+                    loss = adapter.full_loss(params, b, boundary=bnd)
+                    if want_cut:
+                        return loss, T.payload_moments(sink[0])
+                    return loss
+
+                if priv.dp_enabled:
+                    vg = dp_value_and_grad(loss_fn, priv, has_aux=want_cut,
+                                           with_norms=want_clip)
+                else:
+                    vg = jax.value_and_grad(loss_fn, has_aux=want_cut)
+
+                def one(cp, b, k):
+                    met_c = {}
+                    if priv.dp_enabled:
+                        out = vg({"c": cp, "s": server_params}, b, k)
+                        loss, g = out[0], out[1]
+                        if want_cut:
+                            met_c.update(T.moments_to_stats(
+                                *T.combine_moments(*out[2]["aux"])))
+                        if want_clip:
+                            met_c["clip_frac"] = T.clip_fraction(
+                                out[2]["norms"], priv.clip_norm)
+                    elif want_cut:
+                        (loss, mom), g = vg({"c": cp, "s": server_params},
+                                            b, k)
+                        met_c.update(T.moments_to_stats(*mom))
+                    else:
+                        loss, g = vg({"c": cp, "s": server_params}, b, k)
+                    if want_norms:
+                        met_c["grad_norm"] = T.global_norm(g)
+                    return loss, g, met_c
+
+                losses, g, met = jax.vmap(one)(stacked_clients,
+                                               stacked_batch, keys)
+                gc = g["c"]                      # already per-client grads
+                gs = _server_mean(jax.tree.map(
+                    lambda x: (x * w_local.reshape(
+                        (-1,) + (1,) * (x.ndim - 1))).sum(axis=0) / w_sum,
+                    g["s"]))
+                cu, c_opt = opt_client.update(gc, c_opt, stacked_clients)
+                su, s_opt = opt_server.update(gs, s_opt, server_params)
+                if want_norms:
+                    met["update_norm"] = jnp.sqrt(
+                        jax.vmap(lambda u: jnp.square(T.global_norm(u)))(cu)
+                        + jnp.square(T.global_norm(su)))
+                return (O.apply_updates(stacked_clients, cu),
+                        O.apply_updates(server_params, su), c_opt, s_opt,
+                        losses, met)
+            return dp_step_obs, True
 
         def dp_step(stacked_clients, server_params, c_opt, s_opt,
                     stacked_batch, key=None):
@@ -534,6 +869,51 @@ def sflv3_step_fn(adapter: SplitAdapter, opt_client: O.Optimizer,
                     O.apply_updates(server_params, su), c_opt, s_opt,
                     losses)
         return dp_step, True
+
+    if telemetry is not None:
+        def step_obs(stacked_clients, server_params, c_opt, s_opt,
+                     stacked_batch, key=None):
+            _, w_local = _local_rows()
+
+            def client_loss(cp, sp, batch):
+                params = {"front": cp["front"], "middle": sp}
+                if nls:
+                    params["tail"] = cp["tail"]
+                sink = []
+                bnd = (T.observing_boundary(boundary, sink) if want_cut
+                       else boundary)
+                loss = adapter.full_loss(params, batch, boundary=bnd)
+                return loss, (T.payload_moments(sink[0]) if want_cut
+                              else ())
+
+            def mean_loss(sc, sp):
+                losses, moms = jax.vmap(
+                    lambda cp, b: client_loss(cp, sp, b))(sc, stacked_batch)
+                return (losses * w_local).sum() / w_sum, (losses, moms)
+
+            (_, (losses, moms)), (gc, gs) = jax.value_and_grad(
+                mean_loss, argnums=(0, 1), has_aux=True)(stacked_clients,
+                                                         server_params)
+            gc = jax.tree.map(lambda g: g * w_sum, gc)
+            gs = _server_mean(gs)
+            cu, c_opt = opt_client.update(gc, c_opt, stacked_clients)
+            su, s_opt = opt_server.update(gs, s_opt, server_params)
+            met = {}
+            if want_cut:
+                met.update(T.moments_to_stats(*moms))
+            if want_norms:
+                # per-client joint norm: own segment grad + the (shared)
+                # mean server grad — the update each hospital experiences
+                met["grad_norm"] = jnp.sqrt(
+                    jax.vmap(lambda g_: jnp.square(T.global_norm(g_)))(gc)
+                    + jnp.square(T.global_norm(gs)))
+                met["update_norm"] = jnp.sqrt(
+                    jax.vmap(lambda u: jnp.square(T.global_norm(u)))(cu)
+                    + jnp.square(T.global_norm(su)))
+            return (O.apply_updates(stacked_clients, cu),
+                    O.apply_updates(server_params, su), c_opt, s_opt,
+                    losses, met)
+        return step_obs, False
 
     def step(stacked_clients, server_params, c_opt, s_opt, stacked_batch,
              key=None):
@@ -569,21 +949,24 @@ def sflv3_step_fn(adapter: SplitAdapter, opt_client: O.Optimizer,
 # jitted step builders — the stepwise engine's per-batch dispatch wrappers
 # ---------------------------------------------------------------------------
 
-def make_full_step(adapter: SplitAdapter, opt: O.Optimizer, privacy=None):
+def make_full_step(adapter: SplitAdapter, opt: O.Optimizer, privacy=None,
+                   telemetry=None):
     """Jitted plain step (centralized / FL local); see ``full_step_fn``.
-    With DP the returned step takes a fourth ``key`` argument."""
-    step, keyed_ = full_step_fn(adapter, opt, privacy)
+    With DP the returned step takes a fourth ``key`` argument; with
+    ``telemetry`` it returns a trailing metric dict."""
+    step, keyed_ = full_step_fn(adapter, opt, privacy, telemetry)
     if keyed_:
         return jax.jit(lambda p, s, b, k: step(p, s, b, k))
     return jax.jit(lambda p, s, b: step(p, s, b))
 
 
 def make_split_step(adapter: SplitAdapter, opt_client: O.Optimizer,
-                    opt_server: O.Optimizer, transport=None, privacy=None):
+                    opt_server: O.Optimizer, transport=None, privacy=None,
+                    telemetry=None):
     """Jitted SL/SFLv2 step; see ``split_step_fn``.  A privacy config adds
-    a sixth ``key`` argument."""
+    a sixth ``key`` argument; ``telemetry`` adds a trailing metric dict."""
     step, keyed_ = split_step_fn(adapter, opt_client, opt_server, transport,
-                                 privacy)
+                                 privacy, telemetry)
     if keyed_:
         return jax.jit(lambda cp, sp, co, so, b, k: step(cp, sp, co, so, b,
                                                          k))
@@ -592,11 +975,12 @@ def make_split_step(adapter: SplitAdapter, opt_client: O.Optimizer,
 
 def make_sflv3_step(adapter: SplitAdapter, opt_client: O.Optimizer,
                     opt_server: O.Optimizer, n_clients: int, transport=None,
-                    privacy=None):
+                    privacy=None, telemetry=None):
     """Jitted SplitFedv3 step; see ``sflv3_step_fn``.  A privacy config
-    adds a sixth ``key`` argument."""
+    adds a sixth ``key`` argument; ``telemetry`` adds a trailing metric
+    dict."""
     step, keyed_ = sflv3_step_fn(adapter, opt_client, opt_server, n_clients,
-                                 transport, privacy)
+                                 transport, privacy, telemetry=telemetry)
     if keyed_:
         return jax.jit(lambda sc, sp, co, so, b, k: step(sc, sp, co, so, b,
                                                          k))

@@ -11,6 +11,9 @@ from repro.core.strategies.base import (Strategy, EpochLog, make_full_step,
 class Centralized(Strategy):
     name = "centralized"
     shared_eval_params = True
+    # the per-round epsilon series composes at the pooled sampling rate:
+    # every hospital's records sit in the pooled training set
+    _eps_pooled = True
 
     def setup(self, key):
         params = self.adapter.init(key)
@@ -20,51 +23,94 @@ class Centralized(Strategy):
                                         self.privacy)
         return {"params": params, "opt": self._opt.init(params)}
 
+    def _round_telemetry(self, tel, losses, metrics):
+        """Reduce one pooled epoch's per-step taps (the centralized
+        trainer is a single pooled 'hospital')."""
+        from repro.obs import telemetry as T
+        nb = len(losses)
+        if nb == 0:
+            return T.RoundTelemetry(0, {})
+        arr = np.asarray(losses, np.float64)[None, None]
+        mets = {k: np.asarray(v, np.float64)[None, None]
+                for k, v in metrics.items()}
+        return T.rounds_client_major(tel, arr, mets,
+                                     np.ones((1, nb), bool), 1)[0]
+
     def run_epoch(self, state, client_data, rng, batch_size):
         pooled = {k: np.concatenate([d[k] for d in client_data])
                   for k in client_data[0]}
         if self.engine == "compiled":
             return self._run_epoch_compiled(state, pooled, rng, batch_size)
+        tel = self._tel
+        step = self._step if tel is None else self._get_obs(
+            "_step_obs", tel,
+            lambda: make_full_step(self.adapter, self._opt, self.privacy,
+                                   tel))
         n_pooled = len(pooled["label"])
-        losses, weights = [], []
+        losses, weights, met_vals = [], [], []
         for batch in np_batches(pooled, batch_size, rng,
                                 self.drop_remainder):
-            if self._keyed:
-                state["params"], state["opt"], loss = self._step(
-                    state["params"], state["opt"], batch, self._next_key())
-            else:
-                state["params"], state["opt"], loss = self._step(
-                    state["params"], state["opt"], batch)
+            args = ((state["params"], state["opt"], batch,
+                     self._next_key()) if self._keyed
+                    else (state["params"], state["opt"], batch))
+            out = step(*args)
+            self._count_dispatch()
+            state["params"], state["opt"], loss = out[0], out[1], out[2]
+            if tel is not None:
+                met_vals.append(out[3])
             losses.append(float(loss))
             weights.append(len(batch["label"]))
             # centralized DP: every hospital's records sit in the pooled
             # set, so each carries the same pooled-rate guarantee
             for ci in range(self.n_clients):
                 self._dp_account(ci, n_pooled, batch_size)
-        return state, EpochLog(losses, len(losses), weights=weights)
+        log = EpochLog(losses, len(losses), weights=weights)
+        if tel is not None:
+            log.telemetry = self._round_telemetry(
+                tel, losses,
+                {k: [float(m[k]) for m in met_vals]
+                 for k in (met_vals[0] if met_vals else {})})
+        return state, log
 
     def _run_epoch_compiled(self, state, pooled, rng, batch_size):
         from repro.core.strategies import engine as ENG
-        packed = ENG.pack_epoch([pooled], batch_size, rng,
-                                self.drop_remainder)
+        tel = self._tel
+        with self._span("pack"):
+            packed = ENG.pack_epoch([pooled], batch_size, rng,
+                                    self.drop_remainder)
         nb = packed.n_batches[0]
         if nb == 0:
             return state, EpochLog([], 0)
-        if not hasattr(self, "_epoch_c"):
-            self._epoch_c = ENG.make_seq_epoch(self.adapter, self._opt,
-                                               self.privacy)
+        if tel is None:
+            if not hasattr(self, "_epoch_c"):
+                self._epoch_c = ENG.make_seq_epoch(self.adapter, self._opt,
+                                                   self.privacy)
+            epoch_fn = self._epoch_c
+        else:
+            epoch_fn = self._get_obs(
+                "_epoch_obs_c", tel,
+                lambda: ENG.make_seq_epoch(self.adapter, self._opt,
+                                           self.privacy, tel))
         key_idx = np.zeros((packed.nb_max,), np.uint32)
         if self._keyed:
             key_idx[:nb] = self._take_key_indices(nb)
         batches = {k: v[0] for k, v in packed.batches.items()}
         ex_w = None if packed.ex_weights is None else packed.ex_weights[0]
-        state["params"], state["opt"], losses = self._epoch_c(
-            state["params"], state["opt"], batches, packed.mask[0], ex_w,
-            key_idx, self._privacy_base_key())
+        with self._span("dispatch"):
+            out = epoch_fn(
+                state["params"], state["opt"], batches, packed.mask[0],
+                ex_w, key_idx, self._privacy_base_key())
+        self._count_dispatch()
+        state["params"], state["opt"], losses = out[0], out[1], out[2]
         flat = [float(x) for x in np.asarray(losses)[:nb]]
         for ci in range(self.n_clients):
             self._dp_account(ci, packed.n_samples[0], batch_size, count=nb)
-        return state, EpochLog(flat, nb, weights=packed.step_examples[0])
+        log = EpochLog(flat, nb, weights=packed.step_examples[0])
+        if tel is not None:
+            log.telemetry = self._round_telemetry(
+                tel, flat,
+                {k: np.asarray(v)[:nb] for k, v in out[3].items()})
+        return state, log
 
     @property
     def _whole_run(self):
@@ -76,26 +122,45 @@ class Centralized(Strategy):
                   for k in client_data[0]}
         if ENG.empty_run([pooled], batch_size, self.drop_remainder):
             return None
-        batches, packed = ENG.pack_run([pooled], batch_size, rng, n_epochs,
-                                       self.drop_remainder)
+        tel = self._tel
+        with self._span("pack"):
+            batches, packed = ENG.pack_run([pooled], batch_size, rng,
+                                           n_epochs, self.drop_remainder)
         nb = packed.n_batches[0]
-        if not hasattr(self, "_run_c"):
-            self._run_c = ENG.make_seq_run(self.adapter, self._opt,
-                                           self.privacy)
+        if tel is None:
+            if not hasattr(self, "_run_c"):
+                self._run_c = ENG.make_seq_run(self.adapter, self._opt,
+                                               self.privacy)
+            run_fn = self._run_c
+        else:
+            run_fn = self._get_obs(
+                "_run_obs_c", tel,
+                lambda: ENG.make_seq_run(self.adapter, self._opt,
+                                         self.privacy, tel))
         key_idx = np.zeros((n_epochs, packed.nb_max), np.uint32)
         if self._keyed:
             for e in range(n_epochs):
                 key_idx[e, :nb] = self._take_key_indices(nb)
         batches = {k: v[:, 0] for k, v in batches.items()}    # [E, NB, ...]
         ex_w = None if packed.ex_weights is None else packed.ex_weights[0]
-        state["params"], state["opt"], losses = self._run_c(
-            state["params"], state["opt"], batches, packed.mask[0], ex_w,
-            key_idx, self._privacy_base_key())
+        args = (state["params"], state["opt"], batches, packed.mask[0],
+                ex_w, key_idx, self._privacy_base_key())
+        with self._span("dispatch"):
+            out = run_fn(*args)
+        self._count_dispatch()
+        self._last_run_invocation = (run_fn, args)
+        state["params"], state["opt"], losses = out[0], out[1], out[2]
         self._run_calls = getattr(self, "_run_calls", 0) + 1
         losses = np.asarray(losses)
         logs = [EpochLog([float(x) for x in losses[e, :nb]], nb,
                          weights=packed.step_examples[0])
                 for e in range(n_epochs)]
+        if tel is not None:
+            met = {k: np.asarray(v) for k, v in out[3].items()}
+            for e, log in enumerate(logs):
+                log.telemetry = self._round_telemetry(
+                    tel, [float(x) for x in losses[e, :nb]],
+                    {k: v[e, :nb] for k, v in met.items()})
         for ci in range(self.n_clients):
             self._dp_account(ci, packed.n_samples[0], batch_size,
                              count=nb * n_epochs)

@@ -172,7 +172,7 @@ def _step_key(base_key, idx, keyed):
 
 
 def _fl_epoch_body(adapter: SplitAdapter, opt: O.Optimizer, privacy=None,
-                   placement=None):
+                   placement=None, telemetry=None):
     """Traceable FL round: vmap-over-hospitals of scan-over-batches.
     Shared verbatim by ``make_fl_epoch`` and ``make_fl_run``'s round scan
     — one definition is what keeps the two numerically identical.
@@ -183,21 +183,29 @@ def _fl_epoch_body(adapter: SplitAdapter, opt: O.Optimizer, privacy=None,
     partitioner cannot split the grouped-conv lowering of a vmapped CNN
     along the mapped axis, so per-device chunking is done explicitly —
     local epochs are independent, so no collectives are needed.)
+
+    With a ``telemetry`` spec the observed step's metric dict rides the
+    scan as an extra output — the epoch returns one extra trailing
+    ``met`` dict of ``[C, NB]`` arrays (sharded like the losses under
+    placement).  Params are bit-identical: the update math is untouched,
+    only additional outputs are stacked.
     """
-    step, keyed = full_step_fn(adapter, opt, privacy)
+    step, keyed = full_step_fn(adapter, opt, privacy, telemetry)
+    observed = telemetry is not None
 
     def all_clients(gp, bk, batches, mask, ex_w, key_idx):
         def per_client(b_c, m_c, w_c, ki_c):
             def body(carry, xs):
                 p, s = carry
                 batch, m, w, ki = xs
-                p2, s2, loss = step(p, s, batch, _step_key(bk, ki, keyed),
-                                    w)
-                return (tree_select(m, p2, p), tree_select(m, s2, s)), loss
+                out = step(p, s, batch, _step_key(bk, ki, keyed), w)
+                p2, s2, loss = out[0], out[1], out[2]
+                ys = (loss, out[3]) if observed else loss
+                return (tree_select(m, p2, p), tree_select(m, s2, s)), ys
 
-            (p, _), losses = jax.lax.scan(
+            (p, _), ys = jax.lax.scan(
                 body, (gp, opt.init(gp)), (b_c, m_c, w_c, ki_c))
-            return p, losses
+            return (p, *ys) if observed else (p, ys)
 
         return jax.vmap(per_client)(batches, mask, ex_w, key_idx)
 
@@ -210,60 +218,71 @@ def _fl_epoch_body(adapter: SplitAdapter, opt: O.Optimizer, privacy=None,
         H = P("hosp")
         sm = shard_map(all_clients, mesh=placement.mesh,
                        in_specs=(P(), P(), H, H, H, H),
-                       out_specs=(H, H), check_rep=False)
+                       out_specs=(H, H, H) if observed else (H, H),
+                       check_rep=False)
         return sm(global_params, base_key, batches, mask, ex_w, key_idx)
 
     return epoch
 
 
 def make_fl_epoch(adapter: SplitAdapter, opt: O.Optimizer, privacy=None,
-                  placement=None):
+                  placement=None, telemetry=None):
     """FL round as vmap-over-hospitals of scan-over-batches.
 
     Every hospital starts from the broadcast global params with a fresh
     optimizer (FedAvg semantics); masked steps are no-ops via
     ``tree_select`` so the Adam step counter never advances on padding.
     Returns ``epoch(global_params, batches, mask, ex_w, key_idx, base_key)
-    -> (stacked local params, [C, NB] losses)``.
+    -> (stacked local params, [C, NB] losses)`` — plus a trailing ``met``
+    dict of ``[C, NB]`` metric taps with a ``telemetry`` spec.
     """
-    return jax.jit(_fl_epoch_body(adapter, opt, privacy, placement))
+    return jax.jit(_fl_epoch_body(adapter, opt, privacy, placement,
+                                  telemetry))
 
 
-def _seq_epoch_body(adapter: SplitAdapter, opt: O.Optimizer, privacy=None):
+def _seq_epoch_body(adapter: SplitAdapter, opt: O.Optimizer, privacy=None,
+                    telemetry=None):
     """Traceable centralized epoch: one scan-over-batches with persistent
     optimizer state; shared by ``make_seq_epoch`` and ``make_seq_run``."""
-    step, keyed = full_step_fn(adapter, opt, privacy)
+    step, keyed = full_step_fn(adapter, opt, privacy, telemetry)
+    observed = telemetry is not None
 
     def epoch(params, opt_state, batches, mask, ex_w, key_idx, base_key):
         def body(carry, xs):
             p, s = carry
             batch, m, w, ki = xs
-            p2, s2, loss = step(p, s, batch, _step_key(base_key, ki, keyed),
-                                w)
-            return (tree_select(m, p2, p), tree_select(m, s2, s)), loss
+            out = step(p, s, batch, _step_key(base_key, ki, keyed), w)
+            p2, s2, loss = out[0], out[1], out[2]
+            ys = (loss, out[3]) if observed else loss
+            return (tree_select(m, p2, p), tree_select(m, s2, s)), ys
 
-        (params, opt_state), losses = jax.lax.scan(
+        (params, opt_state), ys = jax.lax.scan(
             body, (params, opt_state), (batches, mask, ex_w, key_idx))
-        return params, opt_state, losses
+        if observed:
+            return (params, opt_state, *ys)
+        return params, opt_state, ys
 
     return epoch
 
 
-def make_seq_epoch(adapter: SplitAdapter, opt: O.Optimizer, privacy=None):
+def make_seq_epoch(adapter: SplitAdapter, opt: O.Optimizer, privacy=None,
+                   telemetry=None):
     """Centralized epoch as a single scan-over-batches (one 'hospital',
     persistent optimizer state).  Returns ``epoch(params, opt_state,
     batches, mask, ex_w, key_idx, base_key) -> (params, opt_state,
-    [NB] losses)``."""
-    return jax.jit(_seq_epoch_body(adapter, opt, privacy))
+    [NB] losses)`` — plus a trailing ``met`` dict of ``[NB]`` taps with a
+    ``telemetry`` spec."""
+    return jax.jit(_seq_epoch_body(adapter, opt, privacy, telemetry))
 
 
 def _interleaved_epoch_body(adapter: SplitAdapter, opt_client: O.Optimizer,
                             opt_server: O.Optimizer, transport=None,
-                            privacy=None):
+                            privacy=None, telemetry=None):
     """Traceable SL/SFLv2 epoch: ONE scan over the dense schedule array;
     shared by ``make_interleaved_epoch`` and ``make_interleaved_run``."""
     step, keyed = split_step_fn(adapter, opt_client, opt_server, transport,
-                                privacy)
+                                privacy, telemetry)
+    observed = telemetry is not None
 
     def epoch(stacked_clients, server, stacked_c_opts, s_opt, batches,
               ex_w, sched, key_idx, base_key):
@@ -273,22 +292,24 @@ def _interleaved_epoch_body(adapter: SplitAdapter, opt_client: O.Optimizer,
             c, b = cb[0], cb[1]
             batch = jax.tree.map(lambda x: x[c, b], batches)
             w = None if ex_w is None else ex_w[c, b]
-            cp, sp, cop, so, loss = step(
+            out = step(
                 tree_take(sc, c), sp, tree_take(co, c), so, batch,
                 _step_key(base_key, ki, keyed), w)
-            return (tree_put(sc, c, cp), sp, tree_put(co, c, cop), so), loss
+            cp, sp, cop, so, loss = out[0], out[1], out[2], out[3], out[4]
+            ys = (loss, out[5]) if observed else loss
+            return (tree_put(sc, c, cp), sp, tree_put(co, c, cop), so), ys
 
-        carry, losses = jax.lax.scan(
+        carry, ys = jax.lax.scan(
             body, (stacked_clients, server, stacked_c_opts, s_opt),
             (sched, key_idx))
-        return (*carry, losses)
+        return (*carry, *ys) if observed else (*carry, ys)
 
     return epoch
 
 
 def make_interleaved_epoch(adapter: SplitAdapter, opt_client: O.Optimizer,
                            opt_server: O.Optimizer, transport=None,
-                           privacy=None):
+                           privacy=None, telemetry=None):
     """SL/SFLv2 epoch as ONE scan over the dense schedule array.
 
     The shared server segment forces sequential semantics: each scan step
@@ -296,16 +317,17 @@ def make_interleaved_epoch(adapter: SplitAdapter, opt_client: O.Optimizer,
     hospital axis, runs the exact split step, and scatters the update back.
     Returns ``epoch(stacked_clients, server, stacked_c_opts, s_opt,
     batches, ex_w, sched, key_idx, base_key) -> (stacked_clients, server,
-    stacked_c_opts, s_opt, [steps] losses)``.
+    stacked_c_opts, s_opt, [steps] losses)`` — plus a trailing ``met``
+    dict of ``[steps]`` metric taps with a ``telemetry`` spec.
     """
     return jax.jit(_interleaved_epoch_body(adapter, opt_client, opt_server,
-                                           transport, privacy))
+                                           transport, privacy, telemetry))
 
 
 def _sflv3_epoch_body(adapter: SplitAdapter, opt_client: O.Optimizer,
                       opt_server: O.Optimizer, n_clients: int,
                       transport=None, privacy=None, client_weights=None,
-                      placement=None):
+                      placement=None, telemetry=None):
     """Traceable SplitFedv3/v1 epoch: scan over synchronous steps with the
     vmapped per-client step inside; shared by ``make_sflv3_epoch`` and
     ``make_sflv3_run``.  ``n_clients`` is the ARRAY hospital count (a
@@ -319,18 +341,19 @@ def _sflv3_epoch_body(adapter: SplitAdapter, opt_client: O.Optimizer,
     replicated, client segments and their Adam state stay sharded.
     """
     sharded = placement is not None and placement.enabled
+    observed = telemetry is not None
     if sharded:
         local = placement.c_pad // placement.mesh.devices.size
         weights = (placement.client_weights() if client_weights is None
                    else client_weights)
         step, keyed = sflv3_step_fn(adapter, opt_client, opt_server, local,
                                     transport, privacy, weights,
-                                    mesh_axis="hosp")
+                                    mesh_axis="hosp", telemetry=telemetry)
     else:
         local = n_clients
         step, keyed = sflv3_step_fn(adapter, opt_client, opt_server,
                                     n_clients, transport, privacy,
-                                    client_weights)
+                                    client_weights, telemetry=telemetry)
 
     def chunk_epoch(stacked_clients, server, c_opt, s_opt, batches, b_idx,
                     key_idx, base_key):
@@ -339,13 +362,14 @@ def _sflv3_epoch_body(adapter: SplitAdapter, opt_client: O.Optimizer,
             bi, ki = xs
             batch = jax.tree.map(
                 lambda x: x[jnp.arange(local), bi], batches)
-            sc, sp, co, so, losses = step(
-                sc, sp, co, so, batch, _step_key(base_key, ki, keyed))
-            return (sc, sp, co, so), losses
+            out = step(sc, sp, co, so, batch,
+                       _step_key(base_key, ki, keyed))
+            ys = (out[4], out[5]) if observed else out[4]
+            return out[:4], ys
 
-        carry, losses = jax.lax.scan(
+        carry, ys = jax.lax.scan(
             body, (stacked_clients, server, c_opt, s_opt), (b_idx, key_idx))
-        return (*carry, losses)
+        return (*carry, *ys) if observed else (*carry, ys)
 
     if not sharded:
         return chunk_epoch
@@ -355,14 +379,16 @@ def _sflv3_epoch_body(adapter: SplitAdapter, opt_client: O.Optimizer,
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
         H = P("hosp")
+        SC = P(None, "hosp")       # [steps, C] losses / met taps
         sm = shard_map(
             chunk_epoch, mesh=placement.mesh,
             # c_opt mixes [C, ...] leaves with the scalar Adam count, so it
             # needs per-leaf specs; server + its opt state are replicated
             in_specs=(H, P(), placement.leaf_specs(c_opt), P(), H,
                       P(None, "hosp"), P(), P()),
-            out_specs=(H, P(), placement.leaf_specs(c_opt), P(),
-                       P(None, "hosp")),
+            out_specs=(H, P(), placement.leaf_specs(c_opt), P(), SC, SC)
+            if observed else
+            (H, P(), placement.leaf_specs(c_opt), P(), SC),
             check_rep=False)
         return sm(stacked_clients, server, c_opt, s_opt, batches, b_idx,
                   key_idx, base_key)
@@ -372,15 +398,18 @@ def _sflv3_epoch_body(adapter: SplitAdapter, opt_client: O.Optimizer,
 
 def make_sflv3_epoch(adapter: SplitAdapter, opt_client: O.Optimizer,
                      opt_server: O.Optimizer, n_clients: int, transport=None,
-                     privacy=None, client_weights=None, placement=None):
+                     privacy=None, client_weights=None, placement=None,
+                     telemetry=None):
     """SplitFedv3 epoch: scan over synchronous steps, vmap over hospitals
     inside each step (the step fn already vmaps), with the wrap-around
     batch index precomputed as a dense ``[steps, n_clients]`` array.
     Returns ``epoch(stacked_clients, server, c_opt, s_opt, batches, b_idx,
-    key_idx, base_key) -> (..., [steps, C] losses)``."""
+    key_idx, base_key) -> (..., [steps, C] losses)`` — plus a trailing
+    ``met`` dict of ``[steps, C]`` metric taps with a ``telemetry``
+    spec."""
     return jax.jit(_sflv3_epoch_body(adapter, opt_client, opt_server,
                                      n_clients, transport, privacy,
-                                     client_weights, placement))
+                                     client_weights, placement, telemetry))
 
 
 def _weighted_mean(stacked, w):
@@ -413,6 +442,34 @@ def _mean_sync(stacked, w=None):
         return jnp.broadcast_to(m, x.shape)
 
     return jax.tree.map(leaf, stacked)
+
+
+def _update_cosine(stacked, gp, new_gp, eps=1e-12):
+    """Per-hospital cosine between each local FedAvg update delta
+    (``local_c - global``) and the aggregated mean delta
+    (``new_global - global``) — the round's update-agreement tap
+    (traceable; shared by ``make_fl_run``'s round body and the jitted
+    host-callable ``update_cosine`` the per-epoch paths use).  Zero
+    deltas (phantom rows, no-op rounds) report cosine 0."""
+    C = jax.tree.leaves(stacked)[0].shape[0]
+    deltas = jnp.concatenate(
+        [l.reshape(C, -1).astype(jnp.float32) - g.reshape(-1).astype(
+            jnp.float32)[None]
+         for l, g in zip(jax.tree.leaves(stacked), jax.tree.leaves(gp))],
+        axis=1)
+    mean_d = jnp.concatenate(
+        [(n.astype(jnp.float32) - g.astype(jnp.float32)).reshape(-1)
+         for n, g in zip(jax.tree.leaves(new_gp), jax.tree.leaves(gp))])
+    num = deltas @ mean_d
+    den = (jnp.linalg.norm(deltas, axis=1) * jnp.linalg.norm(mean_d))
+    return num / (den + eps)
+
+
+@jax.jit
+def update_cosine(stacked, gp, new_gp):
+    """Host-callable ``_update_cosine`` for the per-epoch / stepwise FL
+    paths (the whole-run engine computes it inside the round scan)."""
+    return _update_cosine(stacked, gp, new_gp)
 
 
 @jax.jit
@@ -485,7 +542,7 @@ def pack_run(client_data, batch_size: int, rng, n_epochs: int,
 
 
 def make_fl_run(adapter: SplitAdapter, opt: O.Optimizer, privacy=None,
-                placement=None):
+                placement=None, telemetry=None):
     """Whole FL training run as ONE program: ``lax.scan`` over rounds, each
     round the SAME vmap-over-hospitals scan-over-batches body
     ``make_fl_epoch`` jits, followed by the in-graph data-size-weighted
@@ -496,14 +553,32 @@ def make_fl_run(adapter: SplitAdapter, opt: O.Optimizer, privacy=None,
     Phantom rows carry zero aggregation weight.  Returns
     ``run(global_params, batches[E,C,NB,...], mask, ex_w, key_idx[E,C,NB],
     base_key, agg_weights[C]) -> (params, [E,C,NB] losses)``.
+
+    With a ``telemetry`` spec the round body also stacks the step metric
+    taps (``met`` dict of ``[E, C, NB]`` arrays) and — when the spec asks
+    for ``update_cosine`` — each round's per-hospital cosine between the
+    local delta and the aggregated mean delta (``[E, C]``), computed
+    in-graph from the stacked locals the round already holds: the run
+    stays ONE dispatch and the FedAvg math is untouched.
     """
-    epoch = _fl_epoch_body(adapter, opt, privacy, placement)
+    epoch = _fl_epoch_body(adapter, opt, privacy, placement, telemetry)
+    observed = telemetry is not None
+    want_cos = observed and telemetry.update_cosine
 
     def run(global_params, batches, mask, ex_w, key_idx, base_key, agg_w):
         w = agg_w.astype(jnp.float32) / agg_w.astype(jnp.float32).sum()
 
         def round_body(gp, xs):
             b_e, ki_e = xs
+            if observed:
+                stacked, losses, met = epoch(gp, b_e, mask, ex_w, ki_e,
+                                             base_key)
+                new_gp = _weighted_mean(stacked, w)
+                if want_cos:
+                    met = dict(met)
+                    met["update_cosine"] = _update_cosine(stacked, gp,
+                                                          new_gp)
+                return new_gp, (losses, met)
             stacked, losses = epoch(gp, b_e, mask, ex_w, ki_e, base_key)
             return _weighted_mean(stacked, w), losses
 
@@ -512,22 +587,29 @@ def make_fl_run(adapter: SplitAdapter, opt: O.Optimizer, privacy=None,
     return jax.jit(run)
 
 
-def make_seq_run(adapter: SplitAdapter, opt: O.Optimizer, privacy=None):
+def make_seq_run(adapter: SplitAdapter, opt: O.Optimizer, privacy=None,
+                 telemetry=None):
     """Whole centralized run: scan over epochs around ``make_seq_epoch``'s
     scan-over-batches body (persistent optimizer state across epochs).
     Returns ``run(params, opt_state, batches[E,NB,...], mask[NB], ex_w,
-    key_idx[E,NB], base_key) -> (params, opt_state, [E,NB] losses)``."""
-    epoch = _seq_epoch_body(adapter, opt, privacy)
+    key_idx[E,NB], base_key) -> (params, opt_state, [E,NB] losses)`` —
+    plus a trailing ``met`` dict of ``[E, NB]`` taps with a ``telemetry``
+    spec."""
+    epoch = _seq_epoch_body(adapter, opt, privacy, telemetry)
+    observed = telemetry is not None
 
     def run(params, opt_state, batches, mask, ex_w, key_idx, base_key):
         def round_body(carry, xs):
             b_e, ki_e = xs
-            p, s, losses = epoch(*carry, b_e, mask, ex_w, ki_e, base_key)
-            return (p, s), losses
+            out = epoch(*carry, b_e, mask, ex_w, ki_e, base_key)
+            ys = (out[2], out[3]) if observed else out[2]
+            return (out[0], out[1]), ys
 
-        (params, opt_state), losses = jax.lax.scan(
+        (params, opt_state), ys = jax.lax.scan(
             round_body, (params, opt_state), (batches, key_idx))
-        return params, opt_state, losses
+        if observed:
+            return (params, opt_state, *ys)
+        return params, opt_state, ys
 
     return jax.jit(run)
 
@@ -535,7 +617,7 @@ def make_seq_run(adapter: SplitAdapter, opt: O.Optimizer, privacy=None):
 def make_interleaved_run(adapter: SplitAdapter, opt_client: O.Optimizer,
                          opt_server: O.Optimizer, transport=None,
                          privacy=None, sync_clients: bool = False,
-                         client_weights=None):
+                         client_weights=None, telemetry=None):
     """Whole SL/SFLv2 run: scan over epochs around the scanned schedule
     interleave body ``make_interleaved_epoch`` jits.  ``sync_clients``
     folds the SFLv2 end-of-epoch client fed-averaging into the round
@@ -547,7 +629,8 @@ def make_interleaved_run(adapter: SplitAdapter, opt_client: O.Optimizer,
     base_key) -> (..., [E, steps] losses)``.
     """
     epoch = _interleaved_epoch_body(adapter, opt_client, opt_server,
-                                    transport, privacy)
+                                    transport, privacy, telemetry)
+    observed = telemetry is not None
     sync_w = (None if client_weights is None
               else jnp.asarray(client_weights, jnp.float32))
 
@@ -555,16 +638,17 @@ def make_interleaved_run(adapter: SplitAdapter, opt_client: O.Optimizer,
             sched, key_idx, base_key):
         def round_body(carry, xs):
             b_e, ki_e = xs
-            sc, sp, co, so, losses = epoch(*carry, b_e, ex_w, sched, ki_e,
-                                           base_key)
+            out = epoch(*carry, b_e, ex_w, sched, ki_e, base_key)
+            sc, sp, co, so = out[0], out[1], out[2], out[3]
+            ys = (out[4], out[5]) if observed else out[4]
             if sync_clients:
                 sc = _mean_sync(sc, sync_w)
-            return (sc, sp, co, so), losses
+            return (sc, sp, co, so), ys
 
-        carry, losses = jax.lax.scan(
+        carry, ys = jax.lax.scan(
             round_body, (stacked_clients, server, stacked_c_opts, s_opt),
             (batches, key_idx))
-        return (*carry, losses)
+        return (*carry, *ys) if observed else (*carry, ys)
 
     return jax.jit(run)
 
@@ -572,7 +656,7 @@ def make_interleaved_run(adapter: SplitAdapter, opt_client: O.Optimizer,
 def make_sflv3_run(adapter: SplitAdapter, opt_client: O.Optimizer,
                    opt_server: O.Optimizer, n_clients: int, transport=None,
                    privacy=None, sync_clients: bool = False,
-                   client_weights=None, placement=None):
+                   client_weights=None, placement=None, telemetry=None):
     """Whole SplitFedv3/v1 run: scan over epochs around the synchronous-
     step scan body ``make_sflv3_epoch`` jits (wrap-around index grid
     ``b_idx`` is epoch-invariant); ``sync_clients`` folds SFLv1's client
@@ -583,7 +667,8 @@ def make_sflv3_run(adapter: SplitAdapter, opt_client: O.Optimizer,
     base_key) -> (..., [E, steps, C] losses)``."""
     epoch = _sflv3_epoch_body(adapter, opt_client, opt_server, n_clients,
                               transport, privacy, client_weights,
-                              placement)
+                              placement, telemetry)
+    observed = telemetry is not None
     sync_w = (None if client_weights is None
               else jnp.asarray(client_weights, jnp.float32))
 
@@ -591,16 +676,17 @@ def make_sflv3_run(adapter: SplitAdapter, opt_client: O.Optimizer,
             base_key):
         def round_body(carry, xs):
             b_e, ki_e = xs
-            sc, sp, co, so, losses = epoch(*carry, b_e, b_idx, ki_e,
-                                           base_key)
+            out = epoch(*carry, b_e, b_idx, ki_e, base_key)
+            sc, sp, co, so = out[0], out[1], out[2], out[3]
+            ys = (out[4], out[5]) if observed else out[4]
             if sync_clients:
                 sc = _mean_sync(sc, sync_w)
-            return (sc, sp, co, so), losses
+            return (sc, sp, co, so), ys
 
-        carry, losses = jax.lax.scan(
+        carry, ys = jax.lax.scan(
             round_body, (stacked_clients, server, c_opt, s_opt),
             (batches, key_idx))
-        return (*carry, losses)
+        return (*carry, *ys) if observed else (*carry, ys)
 
     return jax.jit(run)
 

@@ -56,12 +56,32 @@ class FedAvg(Strategy):
                                 agg, locals_[0])
         return tree_weighted_mean(locals_, weights)
 
+    def _round_telemetry(self, tel, losses, metrics, mask, old_gp,
+                         stacked_locals, new_gp):
+        """Reduce one FL round's ``[C, NB]`` stacks (+ the in-round update
+        cosine from the stacked locals) into a RoundTelemetry."""
+        from repro.core.strategies import engine as ENG
+        from repro.obs import telemetry as T
+        extra = None
+        if tel.update_cosine:
+            cos = np.asarray(ENG.update_cosine(stacked_locals, old_gp,
+                                               new_gp))
+            extra = {"update_cosine": cos[None]}
+        metrics = {k: np.asarray(v)[None] for k, v in metrics.items()}
+        return T.rounds_client_major(tel, np.asarray(losses)[None], metrics,
+                                     mask, self.n_clients, extra)[0]
+
     def run_epoch(self, state, client_data, rng, batch_size):
         if self.engine == "compiled":
             return self._run_epoch_compiled(state, client_data, rng,
                                             batch_size)
+        tel = self._tel
+        step = self._step if tel is None else self._get_obs(
+            "_step_obs", tel,
+            lambda: make_full_step(self.adapter, self._opt, self.privacy,
+                                   tel))
         locals_, weights, losses = [], [], []
-        loss_w, client_steps = [], []
+        loss_w, client_steps, met_vals = [], [], []
         for ci, data in enumerate(client_data):
             p = state["params"]                    # start from global
             opt_state = self._opt.init(p)          # fresh optimizer per round
@@ -69,11 +89,13 @@ class FedAvg(Strategy):
             steps = 0
             for batch in np_batches(data, batch_size, rng,
                                     self.drop_remainder):
-                if self._keyed:
-                    p, opt_state, loss = self._step(p, opt_state, batch,
-                                                    self._next_key())
-                else:
-                    p, opt_state, loss = self._step(p, opt_state, batch)
+                args = ((p, opt_state, batch, self._next_key())
+                        if self._keyed else (p, opt_state, batch))
+                out = step(*args)
+                self._count_dispatch()
+                p, opt_state, loss = out[0], out[1], out[2]
+                if tel is not None:
+                    met_vals.append(out[3])
                 losses.append(float(loss))
                 loss_w.append(len(batch["label"]))
                 steps += 1
@@ -81,28 +103,54 @@ class FedAvg(Strategy):
             locals_.append(p)
             weights.append(n)
             client_steps.append(steps)
+        old_gp = state["params"]
         state["params"] = self._aggregate(locals_, weights)
-        return state, EpochLog(losses, len(losses), weights=loss_w,
-                               client_steps=client_steps)
+        log = EpochLog(losses, len(losses), weights=loss_w,
+                       client_steps=client_steps)
+        if tel is not None:
+            from repro.core.partition import stack_trees
+            from repro.obs import telemetry as T
+            arr, mask = T.pack_client_major(losses, client_steps)
+            metrics = {
+                k: T.pack_client_major([float(m[k]) for m in met_vals],
+                                       client_steps)[0]
+                for k in (met_vals[0] if met_vals else {})}
+            log.telemetry = self._round_telemetry(
+                tel, arr, metrics, mask, old_gp, stack_trees(locals_),
+                state["params"])
+        return state, log
 
     def _run_epoch_compiled(self, state, client_data, rng, batch_size):
         from repro.core.strategies import engine as ENG
+        tel = self._tel
         place = self.placement
-        packed = ENG.pack_epoch(client_data, batch_size, rng,
-                                self.drop_remainder,
-                                pad_clients=place.n_pad)
+        with self._span("pack"):
+            packed = ENG.pack_epoch(client_data, batch_size, rng,
+                                    self.drop_remainder,
+                                    pad_clients=place.n_pad)
         if packed.nb_max == 0:
             return state, EpochLog([], 0,
                                    client_steps=[0] * self.n_clients)
-        if not hasattr(self, "_epoch_c"):
-            self._epoch_c = ENG.make_fl_epoch(self.adapter, self._opt,
-                                              self.privacy, place)
+        if tel is None:
+            if not hasattr(self, "_epoch_c"):
+                self._epoch_c = ENG.make_fl_epoch(self.adapter, self._opt,
+                                                  self.privacy, place)
+            epoch_fn = self._epoch_c
+        else:
+            epoch_fn = self._get_obs(
+                "_epoch_obs_c", tel,
+                lambda: ENG.make_fl_epoch(self.adapter, self._opt,
+                                          self.privacy, place, tel))
         key_idx = place.put(ENG.key_index_grid(self, packed))
         batches = place.put(packed.batches)
-        locals_stacked, losses = self._epoch_c(
-            state["params"], batches, place.put(packed.mask),
-            place.put(packed.ex_weights), key_idx,
-            self._privacy_base_key())
+        with self._span("dispatch"):
+            out = epoch_fn(
+                state["params"], batches, place.put(packed.mask),
+                place.put(packed.ex_weights), key_idx,
+                self._privacy_base_key())
+        self._count_dispatch()
+        locals_stacked, losses = out[0], out[1]
+        old_gp = state["params"]
         if self.privacy is not None and self.privacy.secagg:
             # secagg masks per-client host uploads: unstack (real hospitals
             # only) and reuse the exact stepwise aggregation path
@@ -117,9 +165,14 @@ class FedAvg(Strategy):
             if nb:
                 self._dp_account(ci, packed.n_samples[ci], batch_size,
                                  count=nb)
-        return state, EpochLog(flat, len(flat), weights=loss_w,
-                               client_steps=list(
-                                   packed.n_batches[:self.n_clients]))
+        log = EpochLog(flat, len(flat), weights=loss_w,
+                       client_steps=list(
+                           packed.n_batches[:self.n_clients]))
+        if tel is not None:
+            log.telemetry = self._round_telemetry(
+                tel, losses, {k: np.asarray(v) for k, v in out[2].items()},
+                packed.mask, old_gp, locals_stacked, state["params"])
+        return state, log
 
     @property
     def _whole_run(self):
@@ -131,20 +184,35 @@ class FedAvg(Strategy):
         from repro.core.strategies import engine as ENG
         if ENG.empty_run(client_data, batch_size, self.drop_remainder):
             return None                        # empty run: per-epoch path
+        tel = self._tel
         place = self.placement
-        batches, packed = ENG.pack_run(client_data, batch_size, rng,
-                                       n_epochs, self.drop_remainder,
-                                       pad_clients=place.n_pad)
-        if not hasattr(self, "_run_c"):
-            self._run_c = ENG.make_fl_run(self.adapter, self._opt,
-                                          self.privacy, place)
+        with self._span("pack"):
+            batches, packed = ENG.pack_run(client_data, batch_size, rng,
+                                           n_epochs, self.drop_remainder,
+                                           pad_clients=place.n_pad)
+        if tel is None:
+            if not hasattr(self, "_run_c"):
+                self._run_c = ENG.make_fl_run(self.adapter, self._opt,
+                                              self.privacy, place)
+            run_fn = self._run_c
+        else:
+            run_fn = self._get_obs(
+                "_run_obs_c", tel,
+                lambda: ENG.make_fl_run(self.adapter, self._opt,
+                                        self.privacy, place, tel))
         key_idx = np.stack([ENG.key_index_grid(self, packed)
                             for _ in range(n_epochs)])
-        state["params"], losses = self._run_c(
-            state["params"], place.put(batches, axis=1),
-            place.put(packed.mask), place.put(packed.ex_weights),
-            place.put(key_idx, axis=1), self._privacy_base_key(),
-            np.asarray(packed.n_samples, np.float32))
+        args = (state["params"], place.put(batches, axis=1),
+                place.put(packed.mask), place.put(packed.ex_weights),
+                place.put(key_idx, axis=1), self._privacy_base_key(),
+                np.asarray(packed.n_samples, np.float32))
+        with self._span("dispatch"):
+            if tel is None:
+                state["params"], losses = run_fn(*args)
+            else:
+                state["params"], (losses, met) = run_fn(*args)
+        self._count_dispatch()
+        self._last_run_invocation = (run_fn, args)
         self._run_calls = getattr(self, "_run_calls", 0) + 1
         losses = np.asarray(losses)
         logs = []
@@ -153,6 +221,15 @@ class FedAvg(Strategy):
             logs.append(EpochLog(flat, len(flat), weights=loss_w,
                                  client_steps=list(
                                      packed.n_batches[:self.n_clients])))
+        if tel is not None:
+            from repro.obs import telemetry as T
+            met = {k: np.asarray(v) for k, v in met.items()}
+            extra = ({"update_cosine": met.pop("update_cosine")}
+                     if "update_cosine" in met else None)
+            rounds = T.rounds_client_major(tel, losses, met, packed.mask,
+                                           self.n_clients, extra)
+            for log, r in zip(logs, rounds):
+                log.telemetry = r
         for ci, nb in enumerate(packed.n_batches):
             if nb:
                 self._dp_account(ci, packed.n_samples[ci], batch_size,

@@ -60,22 +60,42 @@ class SplitLearning(Strategy):
         return {"clients": clients, "server": server,
                 "c_opts": c_opts, "s_opt": opt_s.init(server)}
 
+    def _round_telemetry(self, tel, losses, metrics, sched):
+        """Reduce one epoch's schedule-ordered per-step taps."""
+        from repro.obs import telemetry as T
+        if not len(sched):
+            return T.RoundTelemetry(0, {})
+        return T.rounds_scheduled(
+            tel, np.asarray(losses, np.float64)[None],
+            {k: np.asarray(v, np.float64)[None]
+             for k, v in metrics.items()},
+            np.asarray(sched), self.n_clients)[0]
+
     def run_epoch(self, state, client_data, rng, batch_size):
         if self.engine == "compiled":
             return self._run_epoch_compiled(state, client_data, rng,
                                             batch_size)
+        tel = self._tel
+        step = self._step if tel is None else self._get_obs(
+            "_step_obs", tel,
+            lambda: make_split_step(self.adapter, self._opt_c, self._opt_s,
+                                    self.transport, self.privacy, tel))
         batches = [np_batches(d, batch_size, rng, self.drop_remainder)
                    for d in client_data]
         order = SCHEDULES[self.schedule]([len(b) for b in batches])
-        losses, loss_w = [], []
+        losses, loss_w, met_vals = [], [], []
         client_steps = [0] * self.n_clients
         for c, b in order:
             args = (state["clients"][c], state["server"],
                     state["c_opts"][c], state["s_opt"], batches[c][b])
             if self._keyed:
                 args = args + (self._next_key(),)
+            out = step(*args)
+            self._count_dispatch()
             (state["clients"][c], state["server"], state["c_opts"][c],
-             state["s_opt"], loss) = self._step(*args)
+             state["s_opt"], loss) = out[0], out[1], out[2], out[3], out[4]
+            if tel is not None:
+                met_vals.append(out[5])
             losses.append(float(loss))
             loss_w.append(len(batches[c][b]["label"]))
             client_steps[c] += 1
@@ -87,8 +107,14 @@ class SplitLearning(Strategy):
                 next(bs[0] for bs in batches if bs),
                 [len(b) for b in batches])
         self._end_of_epoch(state)
-        return state, EpochLog(losses, len(losses), weights=loss_w,
-                               client_steps=client_steps)
+        log = EpochLog(losses, len(losses), weights=loss_w,
+                       client_steps=client_steps)
+        if tel is not None:
+            log.telemetry = self._round_telemetry(
+                tel, losses,
+                {k: [float(m[k]) for m in met_vals]
+                 for k in (met_vals[0] if met_vals else {})}, order)
+        return state, log
 
     def _ensure_stacked(self, state):
         """Compiled SL/SFLv2 state keeps the hospital axis stacked BETWEEN
@@ -109,28 +135,41 @@ class SplitLearning(Strategy):
 
     def _run_epoch_compiled(self, state, client_data, rng, batch_size):
         from repro.core.strategies import engine as ENG
+        tel = self._tel
         place = self.placement
-        packed = ENG.pack_epoch(client_data, batch_size, rng,
-                                self.drop_remainder,
-                                pad_clients=place.n_pad)
+        with self._span("pack"):
+            packed = ENG.pack_epoch(client_data, batch_size, rng,
+                                    self.drop_remainder,
+                                    pad_clients=place.n_pad)
         sched = schedule_array(self.schedule, packed.n_batches)
         if len(sched) == 0:
             self._end_of_epoch(state)        # SFLv2 still syncs clients
             return state, EpochLog([], 0,
                                    client_steps=[0] * self.n_clients)
-        if not hasattr(self, "_epoch_c"):
-            self._epoch_c = ENG.make_interleaved_epoch(
-                self.adapter, self._opt_c, self._opt_s, self.transport,
-                self.privacy)
+        if tel is None:
+            if not hasattr(self, "_epoch_c"):
+                self._epoch_c = ENG.make_interleaved_epoch(
+                    self.adapter, self._opt_c, self._opt_s, self.transport,
+                    self.privacy)
+            epoch_fn = self._epoch_c
+        else:
+            epoch_fn = self._get_obs(
+                "_epoch_obs_c", tel,
+                lambda: ENG.make_interleaved_epoch(
+                    self.adapter, self._opt_c, self._opt_s, self.transport,
+                    self.privacy, tel))
         key_idx = (self._take_key_indices(len(sched)) if self._keyed
                    else np.zeros((len(sched),), np.uint32))
         self._ensure_stacked(state)
+        with self._span("dispatch"):
+            out = epoch_fn(
+                state["stacked_clients"], state["server"],
+                state["stacked_c_opts"], state["s_opt"],
+                place.put(packed.batches), place.put(packed.ex_weights),
+                sched, key_idx, self._privacy_base_key())
+        self._count_dispatch()
         (state["stacked_clients"], state["server"],
-         state["stacked_c_opts"], state["s_opt"], losses) = self._epoch_c(
-            state["stacked_clients"], state["server"],
-            state["stacked_c_opts"], state["s_opt"],
-            place.put(packed.batches), place.put(packed.ex_weights),
-            sched, key_idx, self._privacy_base_key())
+         state["stacked_c_opts"], state["s_opt"], losses) = out[:5]
         flat, loss_w = ENG.scheduled_log(losses, sched, packed)
         # the interleave program's output sharding is compiler-chosen:
         # re-place so between-epoch state is always on the hosp mesh
@@ -138,9 +177,14 @@ class SplitLearning(Strategy):
         state["stacked_c_opts"] = place.put(state["stacked_c_opts"])
         self._account_compiled(packed, batch_size)
         self._end_of_epoch(state)
-        return state, EpochLog(flat, len(flat), weights=loss_w,
-                               client_steps=list(
-                                   packed.n_batches[:self.n_clients]))
+        log = EpochLog(flat, len(flat), weights=loss_w,
+                       client_steps=list(
+                           packed.n_batches[:self.n_clients]))
+        if tel is not None:
+            log.telemetry = self._round_telemetry(
+                tel, np.asarray(losses),
+                {k: np.asarray(v) for k, v in out[5].items()}, sched)
+        return state, log
 
     @property
     def _whole_run(self):
@@ -150,28 +194,43 @@ class SplitLearning(Strategy):
         from repro.core.strategies import engine as ENG
         if ENG.empty_run(client_data, batch_size, self.drop_remainder):
             return None                        # empty run: per-epoch path
+        tel = self._tel
         place = self.placement
-        batches, packed = ENG.pack_run(client_data, batch_size, rng,
-                                       n_epochs, self.drop_remainder,
-                                       pad_clients=place.n_pad)
+        with self._span("pack"):
+            batches, packed = ENG.pack_run(client_data, batch_size, rng,
+                                           n_epochs, self.drop_remainder,
+                                           pad_clients=place.n_pad)
         sched = schedule_array(self.schedule, packed.n_batches)
-        if not hasattr(self, "_run_c"):
-            self._run_c = ENG.make_interleaved_run(
-                self.adapter, self._opt_c, self._opt_s, self.transport,
-                self.privacy, sync_clients=self._sync_stacked,
-                client_weights=(place.client_weights() if place.padded
-                                else None))
+        sync_w = place.client_weights() if place.padded else None
+        if tel is None:
+            if not hasattr(self, "_run_c"):
+                self._run_c = ENG.make_interleaved_run(
+                    self.adapter, self._opt_c, self._opt_s, self.transport,
+                    self.privacy, sync_clients=self._sync_stacked,
+                    client_weights=sync_w)
+            run_fn = self._run_c
+        else:
+            run_fn = self._get_obs(
+                "_run_obs_c", tel,
+                lambda: ENG.make_interleaved_run(
+                    self.adapter, self._opt_c, self._opt_s, self.transport,
+                    self.privacy, sync_clients=self._sync_stacked,
+                    client_weights=sync_w, telemetry=tel))
         key_idx = np.stack([
             self._take_key_indices(len(sched)) if self._keyed
             else np.zeros((len(sched),), np.uint32)
             for _ in range(n_epochs)])
         self._ensure_stacked(state)
+        args = (state["stacked_clients"], state["server"],
+                state["stacked_c_opts"], state["s_opt"],
+                place.put(batches, axis=1), place.put(packed.ex_weights),
+                sched, key_idx, self._privacy_base_key())
+        with self._span("dispatch"):
+            out = run_fn(*args)
+        self._count_dispatch()
+        self._last_run_invocation = (run_fn, args)
         (state["stacked_clients"], state["server"],
-         state["stacked_c_opts"], state["s_opt"], losses) = self._run_c(
-            state["stacked_clients"], state["server"],
-            state["stacked_c_opts"], state["s_opt"],
-            place.put(batches, axis=1), place.put(packed.ex_weights),
-            sched, key_idx, self._privacy_base_key())
+         state["stacked_c_opts"], state["s_opt"], losses) = out[:5]
         self._run_calls = getattr(self, "_run_calls", 0) + 1
         state["stacked_clients"] = place.put(state["stacked_clients"])
         state["stacked_c_opts"] = place.put(state["stacked_c_opts"])
@@ -182,6 +241,13 @@ class SplitLearning(Strategy):
             logs.append(EpochLog(flat, len(flat), weights=loss_w,
                                  client_steps=list(
                                      packed.n_batches[:self.n_clients])))
+        if tel is not None:
+            from repro.obs import telemetry as T
+            rounds = T.rounds_scheduled(
+                tel, losses, {k: np.asarray(v) for k, v in out[5].items()},
+                sched, self.n_clients)
+            for log, r in zip(logs, rounds):
+                log.telemetry = r
         self._account_compiled(packed, batch_size, n_epochs)
         return state, logs
 

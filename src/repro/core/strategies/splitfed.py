@@ -103,14 +103,31 @@ class SplitFedV3(SplitLearning):
                 f"{batch_size} train samples; SplitFedV3 needs at least "
                 "one batch per client")
 
+    def _sync_round_telemetry(self, tel, losses, metrics):
+        """Reduce one epoch's ``[S, C]`` synchronous-step taps."""
+        from repro.obs import telemetry as T
+        losses = np.asarray(losses, np.float64)
+        if not losses.size:
+            return T.RoundTelemetry(0, {})
+        return T.rounds_sync(
+            tel, losses[None],
+            {k: np.asarray(v, np.float64)[None]
+             for k, v in metrics.items()}, self.n_clients)[0]
+
     def run_epoch(self, state, client_data, rng, batch_size):
         if self.engine == "compiled":
             return self._run_epoch_compiled(state, client_data, rng,
                                             batch_size)
+        tel = self._tel
+        step3 = self._step3 if tel is None else self._get_obs(
+            "_step3_obs", tel,
+            lambda: make_sflv3_step(self.adapter, self._opt_c, self._opt_s,
+                                    self.n_clients, self.transport,
+                                    self.privacy, telemetry=tel))
         batches = [np_batches(d, batch_size, rng) for d in client_data]
         self._check_batches([len(b) for b in batches], batch_size)
         steps = max(len(b) for b in batches)
-        losses = []
+        losses, step_loss_rows, met_vals = [], [], []
         for s in range(steps):
             # clients that exhausted their data wrap around (all data is
             # seen once per epoch; the server always averages n clients)
@@ -121,8 +138,13 @@ class SplitFedV3(SplitLearning):
                     state["c_opt"], state["s_opt"], stacked_batch)
             if self._keyed:
                 args = args + (self._next_key(),)
+            out = step3(*args)
+            self._count_dispatch()
             (state["stacked_clients"], state["server"], state["c_opt"],
-             state["s_opt"], step_losses) = self._step3(*args)
+             state["s_opt"], step_losses) = out[:5]
+            if tel is not None:
+                step_loss_rows.append(np.asarray(step_losses))
+                met_vals.append(out[5])
             losses.extend(np.asarray(step_losses).tolist())
             for c in range(self.n_clients):
                 # wrap-around resampling included: every client is touched
@@ -135,23 +157,42 @@ class SplitFedV3(SplitLearning):
                                            batches[c][s % len(batches[c])])
         self._record_wire_epoch(batches[0][0], [len(b) for b in batches])
         self._end_of_epoch(state)
-        return state, EpochLog(losses, steps,
-                               client_steps=[steps] * self.n_clients)
+        log = EpochLog(losses, steps,
+                       client_steps=[steps] * self.n_clients)
+        if tel is not None:
+            log.telemetry = self._sync_round_telemetry(
+                tel, np.stack(step_loss_rows),
+                {k: np.stack([np.asarray(m[k]) for m in met_vals])
+                 for k in (met_vals[0] if met_vals else {})})
+        return state, log
 
     def _run_epoch_compiled(self, state, client_data, rng, batch_size):
         from repro.core.strategies import engine as ENG
+        tel = self._tel
         place = self.placement
-        packed = ENG.pack_epoch(client_data, batch_size, rng, True,
-                                pad_clients=place.n_pad)
+        with self._span("pack"):
+            packed = ENG.pack_epoch(client_data, batch_size, rng, True,
+                                    pad_clients=place.n_pad)
         self._check_batches(packed.n_batches[:self.n_clients], batch_size)
         steps = packed.nb_max
-        if not hasattr(self, "_epoch_c"):
-            self._epoch_c = ENG.make_sflv3_epoch(
-                self.adapter, self._opt_c, self._opt_s, place.c_pad,
-                self.transport, self.privacy,
-                client_weights=(place.client_weights() if place.padded
-                                else None),
-                placement=place)
+        if tel is None:
+            if not hasattr(self, "_epoch_c"):
+                self._epoch_c = ENG.make_sflv3_epoch(
+                    self.adapter, self._opt_c, self._opt_s, place.c_pad,
+                    self.transport, self.privacy,
+                    client_weights=(place.client_weights() if place.padded
+                                    else None),
+                    placement=place)
+            epoch_fn = self._epoch_c
+        else:
+            epoch_fn = self._get_obs(
+                "_epoch_obs_c", tel,
+                lambda: ENG.make_sflv3_epoch(
+                    self.adapter, self._opt_c, self._opt_s, place.c_pad,
+                    self.transport, self.privacy,
+                    client_weights=(place.client_weights() if place.padded
+                                    else None),
+                    placement=place, telemetry=tel))
         b_idx = np.stack([[s % nb if nb else 0 for nb in packed.n_batches]
                           for s in range(steps)]).astype(np.int32)
         key_idx = (self._take_key_indices(steps) if self._keyed
@@ -159,15 +200,24 @@ class SplitFedV3(SplitLearning):
         batches = place.put(packed.batches)
         sc = place.put(state["stacked_clients"])
         c_opt = place.put(state["c_opt"])
+        with self._span("dispatch"):
+            out = epoch_fn(
+                sc, state["server"], c_opt, state["s_opt"], batches,
+                place.put(b_idx, axis=1), key_idx,
+                self._privacy_base_key())
+        self._count_dispatch()
         (state["stacked_clients"], state["server"], state["c_opt"],
-         state["s_opt"], losses) = self._epoch_c(
-            sc, state["server"], c_opt, state["s_opt"], batches,
-            place.put(b_idx, axis=1), key_idx, self._privacy_base_key())
+         state["s_opt"], losses) = out[:5]
         flat = np.asarray(losses)[:, :self.n_clients].reshape(-1).tolist()
         self._account_v3(packed, batch_size)
         self._end_of_epoch(state)
-        return state, EpochLog(flat, steps,
-                               client_steps=[steps] * self.n_clients)
+        log = EpochLog(flat, steps,
+                       client_steps=[steps] * self.n_clients)
+        if tel is not None:
+            log.telemetry = self._sync_round_telemetry(
+                tel, np.asarray(losses),
+                {k: np.asarray(v) for k, v in out[5].items()})
+        return state, log
 
     def _account_v3(self, packed, batch_size, n_epochs=1):
         """Analytic accounting: every client is touched every synchronous
@@ -190,36 +240,61 @@ class SplitFedV3(SplitLearning):
 
     def _run_compiled(self, state, client_data, rng, batch_size, n_epochs):
         from repro.core.strategies import engine as ENG
+        tel = self._tel
         place = self.placement
-        batches, packed = ENG.pack_run(client_data, batch_size, rng,
-                                       n_epochs, True,
-                                       pad_clients=place.n_pad)
+        with self._span("pack"):
+            batches, packed = ENG.pack_run(client_data, batch_size, rng,
+                                           n_epochs, True,
+                                           pad_clients=place.n_pad)
         self._check_batches(packed.n_batches[:self.n_clients], batch_size)
         steps = packed.nb_max
-        if not hasattr(self, "_run3_c"):
-            self._run3_c = ENG.make_sflv3_run(
-                self.adapter, self._opt_c, self._opt_s, place.c_pad,
-                self.transport, self.privacy,
-                sync_clients=self._sync_stacked,
-                client_weights=(place.client_weights() if place.padded
-                                else None),
-                placement=place)
+        if tel is None:
+            if not hasattr(self, "_run3_c"):
+                self._run3_c = ENG.make_sflv3_run(
+                    self.adapter, self._opt_c, self._opt_s, place.c_pad,
+                    self.transport, self.privacy,
+                    sync_clients=self._sync_stacked,
+                    client_weights=(place.client_weights() if place.padded
+                                    else None),
+                    placement=place)
+            run_fn = self._run3_c
+        else:
+            run_fn = self._get_obs(
+                "_run3_obs_c", tel,
+                lambda: ENG.make_sflv3_run(
+                    self.adapter, self._opt_c, self._opt_s, place.c_pad,
+                    self.transport, self.privacy,
+                    sync_clients=self._sync_stacked,
+                    client_weights=(place.client_weights() if place.padded
+                                    else None),
+                    placement=place, telemetry=tel))
         b_idx = np.stack([[s % nb if nb else 0 for nb in packed.n_batches]
                           for s in range(steps)]).astype(np.int32)
         key_idx = np.stack([
             self._take_key_indices(steps) if self._keyed
             else np.zeros((steps,), np.uint32) for _ in range(n_epochs)])
+        args = (place.put(state["stacked_clients"]), state["server"],
+                place.put(state["c_opt"]), state["s_opt"],
+                place.put(batches, axis=1), place.put(b_idx, axis=1),
+                key_idx, self._privacy_base_key())
+        with self._span("dispatch"):
+            out = run_fn(*args)
+        self._count_dispatch()
+        self._last_run_invocation = (run_fn, args)
         (state["stacked_clients"], state["server"], state["c_opt"],
-         state["s_opt"], losses) = self._run3_c(
-            place.put(state["stacked_clients"]), state["server"],
-            place.put(state["c_opt"]), state["s_opt"],
-            place.put(batches, axis=1), place.put(b_idx, axis=1), key_idx,
-            self._privacy_base_key())
+         state["s_opt"], losses) = out[:5]
         self._run_calls = getattr(self, "_run_calls", 0) + 1
-        losses = np.asarray(losses)[:, :, :self.n_clients]
-        logs = [EpochLog(losses[e].reshape(-1).tolist(), steps,
-                         client_steps=[steps] * self.n_clients)
+        losses = np.asarray(losses)
+        logs = [EpochLog(losses[e, :, :self.n_clients].reshape(-1).tolist(),
+                         steps, client_steps=[steps] * self.n_clients)
                 for e in range(n_epochs)]
+        if tel is not None:
+            from repro.obs import telemetry as T
+            rounds = T.rounds_sync(
+                tel, losses, {k: np.asarray(v) for k, v in out[5].items()},
+                self.n_clients)
+            for log, r in zip(logs, rounds):
+                log.telemetry = r
         self._account_v3(packed, batch_size, n_epochs)
         return state, logs
 

@@ -1,0 +1,25 @@
+"""repro.obs — observability for the compiled multi-hospital engine.
+
+Four layers, threaded through the strategy stack (DESIGN.md §12):
+
+  * ``telemetry``  — in-program metric taps riding the engine's scans
+                     (``Telemetry`` spec; per-round x per-hospital stats).
+  * ``trace``      — host-side span tree merged with ``wire.simulator``
+                     transfer timelines and per-round RDP epsilon into one
+                     Chrome-trace/Perfetto JSON.
+  * ``profile``    — ``jax.profiler`` wrapper + compile-time / dispatch /
+                     HLO-cost capture via ``launch.hlo_analysis``.
+  * ``report``     — ``RUNLOG_*.json`` + markdown run reports.
+"""
+
+from repro.obs.telemetry import (RoundTelemetry, RunTelemetry, Telemetry,
+                                 as_telemetry)
+from repro.obs.trace import (Tracer, merge_events, round_events,
+                             wire_events, write_chrome_trace)
+from repro.obs.profile import cost_summary, hlo_cost, jax_profile
+from repro.obs.report import render_markdown, write_runlog
+
+__all__ = ["Telemetry", "RoundTelemetry", "RunTelemetry", "as_telemetry",
+           "Tracer", "merge_events", "round_events", "wire_events",
+           "write_chrome_trace", "cost_summary", "hlo_cost", "jax_profile",
+           "render_markdown", "write_runlog"]

@@ -1,0 +1,394 @@
+"""In-program telemetry — metric taps riding the compiled engine's scans.
+
+The compiled engine (PRs 3-5) lowers whole multi-epoch runs into ONE XLA
+program, which made training fast and *opaque*: the program emits final
+params and a loss stack, nothing else.  ``Telemetry`` is the spec of what
+else to observe; the taps are computed INSIDE the jitted step functions
+from intermediates the step already has (gradients, updates, cut-layer
+payloads, per-example clip norms) and ride the existing scans as extra
+outputs:
+
+  * no host callbacks — a telemetry-enabled ``Strategy.run`` is still ONE
+    dispatch, the metrics simply come back stacked ``[E, ...]`` next to
+    the loss stack;
+  * pure observation — telemetry consumes no PRNG draws and reorders no
+    computation, so telemetry-on params are BIT-identical to
+    telemetry-off (asserted in tests/test_obs.py);
+  * placement-aware — per-hospital metric stacks ride the "hosp" mesh
+    like the losses and the host-side reducers below un-pad phantom
+    hospitals.
+
+Metric taps (each gated by a ``Telemetry`` flag AND by availability —
+cut-layer stats only exist for the SL/SFL family, clip fractions only
+under DP-SGD):
+
+  ``loss``           per-round x per-hospital mean train loss
+  ``grad_norm``      global L2 of the step gradient
+  ``update_norm``    global L2 of the optimizer update actually applied
+  ``update_cosine``  FL only: cosine of each hospital's round update to
+                     the weighted-mean (FedAvg) update
+  ``cut_mean/std/absmax``  moments of the cut-layer payload exactly as it
+                     crosses the wire (post-codec, post-noise)
+  ``clip_frac``      DP-SGD: fraction of examples whose per-example grad
+                     was clipped
+  ``epsilon``        per-round cumulative RDP epsilon per hospital
+                     (composed host-side from the same counts the real
+                     accountant uses)
+
+The host-side reducers (``rounds_client_major`` / ``rounds_scheduled`` /
+``rounds_sync``) fold the per-step stacks into one ``RoundTelemetry`` per
+training round, shared by both engines: the stepwise oracle collects the
+same taps per step and reduces through the same code, which is what makes
+telemetry itself engine-independent (parity-tested).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Telemetry:
+    """Spec of in-program metric taps for one observed run.
+
+    Flags select taps; a tap that does not apply to the strategy at hand
+    (cut stats without a cut layer, clip fractions without DP) is simply
+    absent from the output.  ``Telemetry()`` enables everything.
+    """
+    loss: bool = True
+    norms: bool = True            # grad_norm + update_norm
+    update_cosine: bool = True    # FL: per-round cosine-to-mean update
+    cut_stats: bool = True        # SL/SFL: cut payload mean/std/absmax
+    clip_fraction: bool = True    # DP-SGD: fraction of clipped examples
+    epsilon: bool = True          # per-round RDP eps per hospital
+
+    @property
+    def enabled(self) -> bool:
+        return (self.loss or self.norms or self.update_cosine
+                or self.cut_stats or self.clip_fraction or self.epsilon)
+
+    def step_keys(self, dp: bool, cut: bool) -> tuple[str, ...]:
+        """Static key set of the per-step metric dict a step function
+        emits — fixed at trace time so the scan carries a constant
+        pytree structure."""
+        keys = []
+        if self.norms:
+            keys += ["grad_norm", "update_norm"]
+        if self.cut_stats and cut:
+            keys += ["cut_mean", "cut_std", "cut_absmax"]
+        if self.clip_fraction and dp:
+            keys += ["clip_frac"]
+        return tuple(keys)
+
+
+def as_telemetry(observe) -> Telemetry | None:
+    """Normalize an ``observe=`` argument: None/False off, True -> all
+    taps, or a ``Telemetry`` instance."""
+    if observe is None or observe is False:
+        return None
+    if observe is True:
+        return Telemetry()
+    if not isinstance(observe, Telemetry):
+        raise TypeError(f"observe must be a Telemetry, got {observe!r}")
+    return observe if observe.enabled else None
+
+
+# ---------------------------------------------------------------------------
+# in-graph taps (traceable; called from the jitted step functions)
+# ---------------------------------------------------------------------------
+
+def global_norm(tree):
+    """Global L2 norm over every leaf of a gradient/update pytree."""
+    import jax
+    import jax.numpy as jnp
+    sq = sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+             for l in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def stacked_global_norm(tree):
+    """Per-row global L2 norms of a stacked (leading hospital axis)
+    pytree -> ``[C]``."""
+    import jax
+    return jax.vmap(global_norm)(tree)
+
+
+def payload_moments(tree, weights=None):
+    """(mean, mean-of-squares, absmax) of a cut-layer payload pytree.
+
+    Every leaf carries a leading batch axis; ``weights`` is an optional
+    (B,) 0/1 validity mask (pad-and-mask rows) — masked examples
+    contribute to no moment.  Equal per-example element counts (true for
+    every adapter payload) make the weighted mean of per-example means
+    the batch mean.
+    """
+    import jax
+    import jax.numpy as jnp
+    leaves = jax.tree.leaves(tree)
+    b = leaves[0].shape[0]
+    flat = jnp.concatenate(
+        [l.reshape(b, -1).astype(jnp.float32) for l in leaves], axis=1)
+    if weights is None:
+        return (flat.mean(), jnp.square(flat).mean(),
+                jnp.abs(flat).max())
+    w = weights.astype(jnp.float32)
+    denom = jnp.maximum(w.sum(), 1.0) * flat.shape[1]
+    wcol = w[:, None]
+    mean = (flat * wcol).sum() / denom
+    meansq = (jnp.square(flat) * wcol).sum() / denom
+    amax = jnp.where(wcol > 0, jnp.abs(flat), 0.0).max()
+    return mean, meansq, amax
+
+
+def combine_moments(mean_b, meansq_b, amax_b, weights=None):
+    """Fold per-example moments ``[B]`` (the DP path's vmapped singleton
+    batches) into batch moments — weighted so padded examples vanish."""
+    import jax.numpy as jnp
+    if weights is None:
+        return mean_b.mean(), meansq_b.mean(), amax_b.max()
+    w = weights.astype(jnp.float32)
+    denom = jnp.maximum(w.sum(), 1.0)
+    return ((mean_b * w).sum() / denom, (meansq_b * w).sum() / denom,
+            jnp.where(w > 0, amax_b, 0.0).max())
+
+
+def moments_to_stats(mean, meansq, amax) -> dict:
+    """Finalize moments into the reported cut-stat metric dict."""
+    import jax.numpy as jnp
+    var = jnp.maximum(meansq - jnp.square(mean), 0.0)
+    return {"cut_mean": mean, "cut_std": jnp.sqrt(var), "cut_absmax": amax}
+
+
+def clip_fraction(norms, clip_norm, weights=None):
+    """Fraction of (valid) examples whose per-example gradient hit the
+    clip: ``norm > C`` is exactly when ``clip_scales = min(1, C/norm)``
+    bites.  ``norms`` are the (B,) pre-clip norms the DP clip kernel
+    already computes; ``weights`` excludes padded rows.  ``clip_norm=inf``
+    (clipping disabled) yields 0."""
+    import jax.numpy as jnp
+    clipped = (norms > clip_norm).astype(jnp.float32)
+    if weights is None:
+        return clipped.mean()
+    w = weights.astype(jnp.float32)
+    return (clipped * w).sum() / jnp.maximum(w.sum(), 1.0)
+
+
+def observing_boundary(base_boundary, sink: list):
+    """Wrap a transport/privacy boundary so the FIRST crossing's payload
+    (front->middle — THE cut layer) is recorded into ``sink`` exactly as
+    it ships (post-codec, post-noise).  The payload itself is returned
+    unchanged, so observation never perturbs training math."""
+    def fn(tree):
+        out = tree if base_boundary is None else base_boundary(tree)
+        sink.append(out)
+        return out
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# host-side reductions — per-step stacks -> per-round x per-hospital
+# ---------------------------------------------------------------------------
+
+def _nanrow(n):
+    return np.full((n,), np.nan)
+
+
+def _masked_client_mean(arr, mask, n_clients) -> np.ndarray:
+    """``[C, NB]`` values + validity mask -> per-hospital mean ``[C_real]``
+    (phantom/padded rows sliced off)."""
+    a = np.asarray(arr, np.float64)[:n_clients]
+    m = np.asarray(mask, np.float64)[:n_clients]
+    s, c = (a * m).sum(axis=1), m.sum(axis=1)
+    with np.errstate(invalid="ignore"):
+        return np.where(c > 0, s / np.maximum(c, 1.0), np.nan)
+
+
+def _scheduled_client_mean(arr, sched, n_clients) -> np.ndarray:
+    """``[S]`` per-step values in schedule order -> per-hospital mean."""
+    a = np.asarray(arr, np.float64)
+    out, cnt = np.zeros(n_clients), np.zeros(n_clients)
+    for v, (c, _b) in zip(a, np.asarray(sched)):
+        if c < n_clients:
+            out[c] += v
+            cnt[c] += 1
+    with np.errstate(invalid="ignore"):
+        return np.where(cnt > 0, out / np.maximum(cnt, 1.0), np.nan)
+
+
+@dataclasses.dataclass
+class RoundTelemetry:
+    """One training round's reduced metrics: every value is a
+    ``[n_clients]`` float array (NaN where a hospital took no step)."""
+    round_index: int
+    metrics: dict
+    epsilon: np.ndarray | None = None
+
+    def scalars(self) -> dict:
+        """Hospital-mean summary of each metric (for printing)."""
+        out = {}
+        for k, v in self.metrics.items():
+            with np.errstate(invalid="ignore"):
+                out[k] = float(np.nanmean(v)) if np.asarray(v).size else float("nan")
+        if self.epsilon is not None:
+            out["epsilon_max"] = float(np.max(self.epsilon))
+        return out
+
+    def to_json(self) -> dict:
+        out = {"round": self.round_index,
+               "metrics": {k: np.asarray(v, np.float64).tolist()
+                           for k, v in self.metrics.items()}}
+        if self.epsilon is not None:
+            out["epsilon"] = np.asarray(self.epsilon, np.float64).tolist()
+        return out
+
+
+@dataclasses.dataclass
+class RunTelemetry:
+    """Whole observed run: one ``RoundTelemetry`` per round."""
+    strategy: str
+    n_clients: int
+    rounds: list
+
+    def metric(self, name: str) -> np.ndarray:
+        """``[n_rounds, n_clients]`` stack of one metric across rounds."""
+        return np.stack([r.metrics.get(name, _nanrow(self.n_clients))
+                         for r in self.rounds])
+
+    def to_json(self) -> dict:
+        return {"strategy": self.strategy, "n_clients": self.n_clients,
+                "rounds": [r.to_json() for r in self.rounds]}
+
+    def table(self) -> str:
+        """Markdown per-round summary table."""
+        if not self.rounds:
+            return "(no rounds observed)"
+        keys = sorted({k for r in self.rounds for k in r.scalars()})
+        lines = ["| round | " + " | ".join(keys) + " |",
+                 "|---" * (len(keys) + 1) + "|"]
+        for r in self.rounds:
+            s = r.scalars()
+            lines.append("| " + " | ".join(
+                [str(r.round_index)]
+                + [f"{s[k]:.4g}" if k in s and np.isfinite(s[k]) else "-"
+                   for k in keys]) + " |")
+        return "\n".join(lines)
+
+
+def _per_metric(tel: Telemetry, loss, metrics: dict, reduce) -> dict:
+    out = {}
+    if tel.loss:
+        out["loss"] = reduce(loss)
+    for k, v in metrics.items():
+        out[k] = reduce(v)
+    return out
+
+
+def rounds_client_major(tel: Telemetry, losses, metrics: dict, mask,
+                        n_clients: int, extra: dict | None = None) -> list:
+    """Reduce FL/centralized stacks ``[E, C, NB]`` (+ per-round ``extra``
+    taps ``[E, C]``, e.g. the FedAvg update cosine) into per-round
+    telemetry."""
+    losses = np.asarray(losses)
+    E = losses.shape[0]
+    out = []
+    for e in range(E):
+        m = _per_metric(tel, losses[e],
+                        {k: np.asarray(v)[e] for k, v in metrics.items()},
+                        lambda a: _masked_client_mean(a, mask, n_clients))
+        for k, v in (extra or {}).items():
+            m[k] = np.asarray(v, np.float64)[e][:n_clients]
+        out.append(RoundTelemetry(e, m))
+    return out
+
+
+def rounds_scheduled(tel: Telemetry, losses, metrics: dict, sched,
+                     n_clients: int) -> list:
+    """Reduce SL/SFLv2 stacks ``[E, S]`` through the schedule array."""
+    losses = np.asarray(losses)
+    out = []
+    for e in range(losses.shape[0]):
+        m = _per_metric(
+            tel, losses[e],
+            {k: np.asarray(v)[e] for k, v in metrics.items()},
+            lambda a: _scheduled_client_mean(a, sched, n_clients))
+        out.append(RoundTelemetry(e, m))
+    return out
+
+
+def rounds_sync(tel: Telemetry, losses, metrics: dict,
+                n_clients: int) -> list:
+    """Reduce SFLv3/v1 stacks ``[E, S, C]`` (every client active every
+    synchronous step; placement phantom columns sliced off)."""
+    losses = np.asarray(losses)
+    out = []
+    for e in range(losses.shape[0]):
+        m = _per_metric(
+            tel, losses[e],
+            {k: np.asarray(v)[e] for k, v in metrics.items()},
+            lambda a: np.asarray(a, np.float64)[:, :n_clients].mean(axis=0)
+            if np.asarray(a).size else _nanrow(n_clients))
+        out.append(RoundTelemetry(e, m))
+    return out
+
+
+def pack_client_major(values: list, n_batches: list):
+    """Stepwise-engine helper: a client-major flat list of per-step values
+    -> (``[C, NB_max]`` array, validity mask) matching the compiled
+    layout, so both engines reduce through the same code."""
+    C = len(n_batches)
+    NB = max(n_batches, default=0)
+    arr = np.zeros((C, max(NB, 1)))
+    mask = np.zeros((C, max(NB, 1)), bool)
+    it = iter(values)
+    for c, nb in enumerate(n_batches):
+        for b in range(nb):
+            arr[c, b] = next(it)
+            mask[c, b] = True
+    return arr, mask
+
+
+# ---------------------------------------------------------------------------
+# per-round privacy epsilon series
+# ---------------------------------------------------------------------------
+
+def epsilon_rounds(privacy, logs, n_samples: list, batch_size: int,
+                   pooled: bool = False) -> np.ndarray | None:
+    """``[n_rounds, n_clients]`` cumulative (eps at delta) after each
+    round, composed from the SAME per-round step counts and sampling
+    rates the strategies feed the real accountant (``EpochLog.
+    client_steps`` / ``steps``), so the last row equals the run's
+    ``privacy_report`` epsilons when this run is the only training.
+
+    ``pooled`` is the centralized case: every hospital's records sit in
+    the pooled set, so each composes at the pooled sampling rate over the
+    pooled step count.
+    """
+    if privacy is None or not privacy.dp_enabled:
+        return None
+    from repro.privacy.accountant import RDPAccountant
+    n_clients = len(n_samples)
+    n_pool = sum(n_samples)
+    accts = [RDPAccountant(privacy.noise_multiplier, privacy.delta)
+             for _ in range(n_clients)]
+    out = np.zeros((len(logs), n_clients))
+    for e, log in enumerate(logs):
+        for c in range(n_clients):
+            if pooled:
+                q, steps = (min(batch_size / max(n_pool, 1), 1.0),
+                            log.steps)
+            else:
+                q = min(batch_size / max(n_samples[c], 1), 1.0)
+                steps = (log.client_steps[c]
+                         if log.client_steps is not None else log.steps)
+            accts[c].step(q, steps)
+            out[e, c] = accts[c].epsilon()[0]
+    return out
+
+
+__all__ = ["Telemetry", "RoundTelemetry", "RunTelemetry", "as_telemetry",
+           "global_norm", "stacked_global_norm", "payload_moments",
+           "combine_moments", "moments_to_stats", "clip_fraction",
+           "observing_boundary", "rounds_client_major", "rounds_scheduled",
+           "rounds_sync", "pack_client_major", "epsilon_rounds"]

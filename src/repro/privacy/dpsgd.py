@@ -95,17 +95,20 @@ def _expand_batch(batch):
     return jax.tree.map(lambda v: v[:, None], batch)
 
 
-def per_example_grads(loss_fn, params, batch, keys):
+def per_example_grads(loss_fn, params, batch, keys, has_aux=False):
     """vmap'd (loss, grad) over singleton sub-batches.
 
     ``loss_fn(params, batch, key) -> scalar`` must be a per-batch MEAN, so
     a size-1 batch yields that example's own loss/gradient; ``keys`` is a
     (B,)-keyed array giving each example independent noise (cut-layer
     noise draws must be iid across examples).  Returns ((B,) losses, grad
-    tree with leading batch axis).
+    tree with leading batch axis); with ``has_aux`` the loss_fn returns
+    ``(loss, aux)`` and the result is ``((losses, aux_stacked), grads)``
+    — the telemetry taps ride per-example aux out of the vmap without
+    touching the gradient computation.
     """
     def one(b, k):
-        return jax.value_and_grad(loss_fn)(params, b, k)
+        return jax.value_and_grad(loss_fn, has_aux=has_aux)(params, b, k)
     return jax.vmap(one)(_expand_batch(batch), keys)
 
 
@@ -122,7 +125,8 @@ def example_keys(key, b: int):
         jnp.arange(b, dtype=jnp.uint32))
 
 
-def dp_value_and_grad(loss_fn, cfg: PrivacyConfig):
+def dp_value_and_grad(loss_fn, cfg: PrivacyConfig, has_aux=False,
+                      with_norms=False):
     """DP analogue of ``jax.value_and_grad``.
 
     ``loss_fn(params, batch, key) -> scalar`` (use ``keyed`` to lift a
@@ -139,6 +143,13 @@ def dp_value_and_grad(loss_fn, cfg: PrivacyConfig):
     ``sum(weights)``, so the estimator equals the stepwise short-batch
     step bit-for-bit (noise included: the noise key and the summed-grad
     shape do not depend on padding).
+
+    Telemetry hooks (both leave the estimator untouched): ``has_aux``
+    makes loss_fn return ``(loss, aux)`` with per-example aux stacked
+    along axis 0, and ``with_norms`` exposes the (B,) per-example
+    pre-clip gradient norms the clip kernel computes anyway.  With either
+    set the returned fn yields ``(loss, grad, extras)`` where extras may
+    hold ``"aux"`` and/or ``"norms"``.
     """
     if cfg.use_kernel:
         from repro.kernels.dp_clip.ops import clip_accumulate
@@ -154,8 +165,9 @@ def dp_value_and_grad(loss_fn, cfg: PrivacyConfig):
     def fn(params, batch, key, weights=None):
         b = jax.tree.leaves(batch)[0].shape[0]
         ex_key, noise_key = jax.random.split(key)
-        losses, grads = per_example_grads(loss_fn, params, batch,
-                                          example_keys(ex_key, b))
+        out = per_example_grads(loss_fn, params, batch,
+                                example_keys(ex_key, b), has_aux=has_aux)
+        (losses, aux), grads = out if has_aux else ((out[0], None), out[1])
         if weights is None:
             denom, loss = b, losses.mean()
         else:
@@ -164,11 +176,18 @@ def dp_value_and_grad(loss_fn, cfg: PrivacyConfig):
                 lambda g: g * w.reshape((b,) + (1,) * (g.ndim - 1)), grads)
             denom = jnp.maximum(w.sum(), 1.0)
             loss = (losses * w).sum() / denom
-        summed, _ = clip_fn(grads)
+        summed, norms = clip_fn(grads)
         summed = O.tree_gaussian_noise(summed, noise_key, noise_std)
         grad = jax.tree.map(lambda s, p: (s / denom).astype(p.dtype),
                             summed, params)
-        return loss, grad
+        if not (has_aux or with_norms):
+            return loss, grad
+        extras = {}
+        if has_aux:
+            extras["aux"] = aux
+        if with_norms:
+            extras["norms"] = norms
+        return loss, grad, extras
 
     return fn
 
@@ -176,25 +195,51 @@ def dp_value_and_grad(loss_fn, cfg: PrivacyConfig):
 def cut_noise_boundary(base_boundary, cut_noise_std: float):
     """Wrap a transport boundary fn with additive Gaussian cut-layer noise.
 
-    Returns ``fn(tree, key)``; noise rides AFTER the codec roundtrip — the
-    client adds it to exactly what ships, so the server (and the leakage
-    probe) only ever sees the noised payload.
+    Returns ``fn(tree, key, weights=None)``; noise rides AFTER the codec
+    roundtrip — the client adds it to exactly what ships, so the server
+    (and the leakage probe) only ever sees the noised payload.
+
+    Draws are PER-EXAMPLE: leaf ``l`` of the payload gets key
+    ``fold_in(key, leaf_idx)`` and example ``j`` in the batch draws
+    ``normal(fold_in(leaf_key, j), l.shape[1:])`` — like ``example_keys``,
+    the draw for a real example depends on its position, never on the
+    batch LENGTH, so a pad-and-mask padded remainder batch noises its real
+    rows exactly as the stepwise short batch does (this is what lets the
+    compiled engine keep ``drop_remainder=False`` with cut-layer noise and
+    no DP).  ``weights`` (optional (B,) 0/1 validity) zeroes the noise on
+    padded rows so the shipped payload stays clean there.
     """
     std = float(cut_noise_std)
 
-    def fn(tree, key):
+    def fn(tree, key, weights=None):
         if base_boundary is not None:
             tree = base_boundary(tree)
-        return O.tree_gaussian_noise(tree, key, std)
+        leaves, treedef = jax.tree.flatten(tree)
+        noised = []
+        for li, l in enumerate(leaves):
+            lk = jax.random.fold_in(key, jnp.uint32(li))
+            b = l.shape[0]
+            ks = jax.vmap(lambda i: jax.random.fold_in(lk, i))(
+                jnp.arange(b, dtype=jnp.uint32))
+            z = jax.vmap(
+                lambda k: jax.random.normal(k, l.shape[1:], jnp.float32))(ks)
+            z = std * z
+            if weights is not None:
+                z = z * weights.astype(jnp.float32).reshape(
+                    (b,) + (1,) * (l.ndim - 1))
+            noised.append(l + z.astype(l.dtype))
+        return jax.tree.unflatten(treedef, noised)
 
     return fn
 
 
-def boundary_with_key(base_boundary, cfg: PrivacyConfig, key):
+def boundary_with_key(base_boundary, cfg: PrivacyConfig, key, weights=None):
     """Bind a step key into a ``boundary(tree)`` hook for full_loss.
 
     Each boundary crossing folds a fresh trace-time counter into ``key`` so
-    front->middle and middle->tail draws are independent.
+    front->middle and middle->tail draws are independent.  ``weights``
+    (per-example pad-mask, compiled engine only) masks the noise on padded
+    rows — see ``cut_noise_boundary``.
     """
     if cfg is None or cfg.cut_noise_std <= 0:
         return base_boundary
@@ -204,6 +249,6 @@ def boundary_with_key(base_boundary, cfg: PrivacyConfig, key):
     def fn(tree):
         k = jax.random.fold_in(key, crossing[0])
         crossing[0] += 1
-        return noised(tree, k)
+        return noised(tree, k, weights)
 
     return fn

@@ -104,6 +104,17 @@ def test_parity_cut_noise(tiny_setup):
     _assert_parity("sl_ac", clients, adapter, privacy=CUT)
 
 
+@pytest.mark.parametrize("method", ["sl_am", "sflv2_ac"])
+def test_parity_cut_noise_keep_remainder(method, tiny_setup):
+    """Cut-layer noise WITHOUT DP + drop_remainder=False: noise draws are
+    per-example (fold_in by row index), so the compiled pad-and-mask rows
+    draw exactly what the stepwise short batch draws — padded rows get
+    zero noise and zero loss weight."""
+    clients, adapter = tiny_setup
+    _assert_parity(method, clients, adapter, privacy=CUT,
+                   drop_remainder=False)
+
+
 def test_parity_fl_secagg(tiny_setup):
     """secagg keeps the host-side masked aggregation on the compiled path
     (per-client uploads must exist to be masked)."""
@@ -345,12 +356,10 @@ def test_engine_guards(tiny_setup):
     with pytest.raises(ValueError):
         make_strategy("fl", adapter, lambda: O.adam(1e-3), 3,
                       engine="warp")
-    # cut-layer-noise-ONLY draws follow the (padded) batch shape and stay
-    # rejected with partial batches ...
-    with pytest.raises(ValueError):
-        make_strategy("sl_ac", adapter, lambda: O.adam(1e-3), 3,
-                      privacy=CUT, engine="compiled", drop_remainder=False)
-    # ... but DP-SGD is per-example (weighted clipping): allowed
+    # cut-layer noise draws are per-example (batch-length independent), so
+    # both privacy modes accept kept remainder batches
+    make_strategy("sl_ac", adapter, lambda: O.adam(1e-3), 3,
+                  privacy=CUT, engine="compiled", drop_remainder=False)
     make_strategy("fl", adapter, lambda: O.adam(1e-3), 3, privacy=DP,
                   engine="compiled", drop_remainder=False)
     with pytest.raises(ValueError):                 # batch-synchronous v3

@@ -143,6 +143,67 @@ def test_cosine_bounds(warmup, total):
 
 
 # ---------------------------------------------------------------------------
+# wire simulator timelines (observability satellite)
+# ---------------------------------------------------------------------------
+
+def _sim_legs():
+    """One cached leg-size dict — leg sizes depend only on the adapter and
+    batch shape, so every hypothesis example reuses them."""
+    global _SIM_CACHE
+    try:
+        return _SIM_CACHE
+    except NameError:
+        pass
+    from repro.core.partition import cnn_adapter
+    from repro.models.cnn import DenseNetConfig, build_densenet
+    adapter = cnn_adapter(build_densenet(
+        DenseNetConfig(growth=4, blocks=(1, 1), stem_ch=4, cut_layer=1)))
+    batch = {"image": np.zeros((4, 8, 8, 1), np.float32),
+             "label": np.zeros((4,), np.float32)}
+    _SIM_CACHE = (adapter, batch)
+    return _SIM_CACHE
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.sampled_from(["sl_ac", "sl_am", "sflv2_ac", "sflv3_ac", "fl"]),
+       st.lists(st.integers(0, 30), min_size=2, max_size=5),
+       st.integers(1, 8))
+def test_sim_timelines_ordered_and_byte_exact(method, n_train, batch_size):
+    """``SimResult.timeline(client)`` invariants for any hospital mix:
+    each client's transfers are time-ordered and non-overlapping (one
+    serial link per client), and the event byte totals reproduce the
+    analytic per-tag accounting (``core.comm.comm_per_epoch``) exactly —
+    the same invariant ``Transport`` accounting sits on."""
+    from repro.core.comm import comm_per_epoch
+    from repro.wire.simulator import simulate
+    adapter, batch = _sim_legs()
+    n_val = [max(0, n // 2) for n in n_train]
+    r = simulate(method, adapter, batch, n_train, n_val, batch_size,
+                 network="hospital_wan")
+    for c in range(len(n_train)):
+        tl = r.timeline(c)
+        assert all(e.client == c for e in tl)
+        for a, b in zip(tl, tl[1:]):
+            assert a.t_start <= a.t_end
+            assert b.t_start >= a.t_end - 1e-9    # serialized link
+    # every event appears in exactly one client's timeline
+    assert sum(len(r.timeline(c)) for c in range(len(n_train))) == len(
+        r.events)
+    # per-tag byte totals == the analytic accounting, to the byte
+    analytic = comm_per_epoch(method, adapter, batch, n_train, n_val,
+                              batch_size)
+    by_tag = {}
+    for e in r.events:
+        by_tag[e.tag] = by_tag.get(e.tag, 0.0) + e.nbytes
+    assert set(by_tag) == {t for t, b in analytic.breakdown.items()
+                           if b > 0}
+    for tag, b in by_tag.items():
+        assert b == pytest.approx(analytic.breakdown[tag]), tag
+    assert r.bytes_on_wire == pytest.approx(
+        sum(analytic.breakdown.values()))
+
+
+# ---------------------------------------------------------------------------
 # quantizer error bound (per-row int8)
 # ---------------------------------------------------------------------------
 
