@@ -20,10 +20,30 @@ Writes ``benchmarks/results/BENCH_engine.json``:
     {"results": [{"method", "n_clients", "engine", "mode",
                   "steps_per_epoch", "epoch_seconds", "steps_per_sec"},
                  ...],                  # run3 rows add compile_seconds,
-                                        # dispatches_per_run, observed
+                                        # dispatches_per_run, observed,
+                                        # precision, fused (+ the raw-speed
+                                        # rows: hlo_compile_seconds and the
+                                        # compiler's "memory" buffer view)
      "speedup": {"fl@10": 7.3,          # compiled / stepwise, one epoch
-                 "fl@10:run3": 9.1},    # whole 3-epoch run
+                 "fl@10:run3": 9.1,     # whole 3-epoch run
+                 "sl_am@10:fused": 1.4, # fused kernel  vs fp32-unfused
+                 "sl_am@10:bf16": 1.6}, # bf16 compute  vs fp32-unfused
      "telemetry_overhead": {"fl@10": 0.012}}
+
+A raw-speed grid (compiled whole-run only) times each method at
+(fp32, unfused int8 transport) -> (fp32, fused cut-layer kernel) ->
+(bf16, fused); the ``:fused`` / ``:bf16`` keys are steps/s ratios over
+the fp32-unfused oracle and gate under ``--check-against`` exactly like
+the engine speedups — a drop below 80% of the committed floor fails.
+The variants are timed ROUND-ROBIN (one run each per pass, median per
+variant — ``time_raw_grid``): shared hosts drift the SAME program ±30%
+with position in the process, so sequential per-variant timing measures
+schedule, not code.  On a CPU runner the fused and unfused programs
+compile to the SAME optimized HLO (interpret-mode Pallas re-fuses under
+XLA), so the CPU ratio is ~1.0 and its gate is a pure no-regression
+guard; the kernel's single-VMEM-pass saving is real hardware's story.
+bf16 on CPU runs through f32 converts and may sit slightly under 1.0 —
+also honest.
 
 ``--shard`` additionally times the compiled engine with
 ``make_strategy(..., shard=True)`` — the hospital axis placed on the
@@ -109,15 +129,24 @@ def time_engine(method, engine, clients, adapter, batch_size, epochs,
 
 
 def time_whole_run(method, engine, clients, adapter, batch_size,
-                   run_epochs, reps, shard=False, observe=False):
+                   run_epochs, reps, shard=False, observe=False,
+                   precision="fp32", fuse=None, cost=False):
     """Time ``Strategy.run(n_epochs=run_epochs)`` — ONE program under the
     compiled engine, a per-epoch loop under stepwise.  ``observe=True``
     runs with the full telemetry spec (repro.obs) — the taps ride the
     run scan as extra outputs, so the steady-state cost they add is what
-    the telemetry-overhead gate measures."""
+    the telemetry-overhead gate measures.  ``fuse`` (raw-speed grid) adds
+    an int8 cut-layer transport with the fused kernel on or off;
+    ``precision`` selects bf16 compute; ``cost=True`` re-lowers the
+    compiled run for the compiler's peak-HBM view (``obs.profile``)."""
     from repro.obs import Telemetry
+    transport = None
+    if fuse is not None:
+        from repro.wire import Transport
+        transport = Transport("int8", fuse=fuse)
     strat = make_strategy(method, adapter, lambda: O.adam(1e-3),
                           len(clients), engine=engine, shard=shard,
+                          transport=transport, precision=precision,
                           observe=Telemetry() if observe else None)
     state = strat.setup(jax.random.key(0))
     rng = np.random.default_rng(0)
@@ -136,13 +165,82 @@ def time_whole_run(method, engine, clients, adapter, batch_size,
         times.append(time.perf_counter() - t0)
     sec = float(np.median(times))
     steps = sum(l.steps for l in logs)
-    return {"method": method, "n_clients": len(clients), "engine": engine,
-            "mode": f"run{run_epochs}" + (":obs" if observe else ""),
-            "shard": bool(shard), "observed": bool(observe),
-            "steps_per_epoch": steps, "epoch_seconds": sec,
-            "compile_seconds": first_call - sec,
-            "dispatches_per_run": strat._dispatches // (reps + 1),
-            "steps_per_sec": steps / sec if sec > 0 else float("inf")}
+    row = {"method": method, "n_clients": len(clients), "engine": engine,
+           "mode": f"run{run_epochs}" + (":obs" if observe else ""),
+           "shard": bool(shard), "observed": bool(observe),
+           "precision": precision,
+           "fused": None if fuse is None else bool(fuse),
+           "steps_per_epoch": steps, "epoch_seconds": sec,
+           "compile_seconds": first_call - sec,
+           "dispatches_per_run": strat._dispatches // (reps + 1),
+           "steps_per_sec": steps / sec if sec > 0 else float("inf")}
+    if cost:
+        from repro.obs.profile import hlo_cost
+        hc = hlo_cost(strat)
+        if hc is not None:
+            row["hlo_compile_seconds"] = hc["compile_seconds"]
+            if "memory" in hc:
+                row["memory"] = hc["memory"]
+    return row
+
+
+def time_raw_grid(method, clients, adapter, batch_size, run_epochs, reps,
+                  variants):
+    """Round-robin timing of the raw-speed variants — one timed run per
+    variant per pass.  Sequential per-variant timing is unusable for a
+    ratio gate on shared hosts: the SAME program drifts ±30% with
+    position in the process (allocator growth, cgroup throttle phases),
+    so whichever variant runs later eats the drift.  Interleaving spreads
+    it across all variants; the per-variant median over passes is fair."""
+    from repro.obs.profile import hlo_cost
+    data = [c.train for c in clients]
+    recs = []
+    for prec, fu in variants:
+        transport = None
+        if fu is not None:
+            from repro.wire import Transport
+            transport = Transport("int8", fuse=fu)
+        strat = make_strategy(method, adapter, lambda: O.adam(1e-3),
+                              len(clients), transport=transport,
+                              precision=prec)
+        state = strat.setup(jax.random.key(0))
+        rng = np.random.default_rng(0)
+        t0 = time.perf_counter()
+        state, logs = strat.run(state, data, rng, batch_size, run_epochs)
+        recs.append({"prec": prec, "fu": fu, "strat": strat, "state": state,
+                     "rng": rng, "logs": logs,
+                     "first": time.perf_counter() - t0, "times": []})
+    for _ in range(reps):
+        for rec in recs:
+            s = rec["state"]
+            jax.block_until_ready(jax.tree.leaves(
+                s.get("params", s.get("server")))[0])
+            t0 = time.perf_counter()
+            rec["state"], rec["logs"] = rec["strat"].run(
+                rec["state"], data, rec["rng"], batch_size, run_epochs)
+            jax.block_until_ready(jax.tree.leaves(
+                rec["state"].get("params", rec["state"].get("server")))[0])
+            rec["times"].append(time.perf_counter() - t0)
+    rows = []
+    for rec in recs:
+        sec = float(np.median(rec["times"]))
+        steps = sum(l.steps for l in rec["logs"])
+        row = {"method": method, "n_clients": len(clients),
+               "engine": "compiled", "mode": f"run{run_epochs}",
+               "shard": False, "observed": False,
+               "precision": rec["prec"],
+               "fused": None if rec["fu"] is None else bool(rec["fu"]),
+               "steps_per_epoch": steps, "epoch_seconds": sec,
+               "compile_seconds": rec["first"] - sec,
+               "dispatches_per_run": rec["strat"]._dispatches // (reps + 1),
+               "steps_per_sec": steps / sec if sec > 0 else float("inf")}
+        hc = hlo_cost(rec["strat"])
+        if hc is not None:
+            row["hlo_compile_seconds"] = hc["compile_seconds"]
+            if "memory" in hc:
+                row["memory"] = hc["memory"]
+        rows.append(row)
+    return rows
 
 
 def check_telemetry_overhead(overhead: dict,
@@ -277,6 +375,47 @@ def main():
                     speedup[key] = round(sp, 2)
                     print(f"{method:10s} n={n:3d} speedup {name:8s}"
                           f" {sp:7.2f}x")
+
+        # raw-speed grid: fused cut-layer kernel and bf16 compute vs the
+        # fp32-UNFUSED oracle, compiled whole-run only.  Non-split methods
+        # have no cut layer, so their grid is precision-only; when the
+        # method list has no split member one is added so the fused kernel
+        # is always gated.  ':fused' / ':bf16' speedup keys feed the same
+        # --check-against floor as the engine speedups.  Skipped under
+        # --shard: virtual-device hosts split the thread pool and measure
+        # scheduler noise, not the kernel — the unsharded smoke job owns
+        # this gate.
+        if args.shard:
+            continue
+        raw_methods = list(methods)
+        if all(m in ("fl", "centralized") for m in raw_methods):
+            raw_methods.append("sl_am")
+        raw_reps = max(epochs, 5)
+        for method in raw_methods:
+            split = method not in ("fl", "centralized")
+            variants = ([("fp32", False), ("fp32", True), ("bf16", True)]
+                        if split else [("fp32", None), ("bf16", None)])
+            rows = time_raw_grid(method, tel_clients, tel_adapter,
+                                 args.batch, args.run_epochs, raw_reps,
+                                 variants)
+            base = rows[0]
+            for r in rows:
+                results.append(r)
+                name = r["precision"] + {None: "", True: "+fused",
+                                         False: "+unfused"}[r["fused"]]
+                hbm = (r.get("memory") or {}).get("temp_size_in_bytes")
+                print(f"{method:10s} n={n:3d} {name:15s} "
+                      f"run{args.run_epochs:<3d} "
+                      f"{r['steps_per_sec']:9.1f} steps/s"
+                      + (f" (temp HBM {hbm / 1e3:.1f} kB)" if hbm else ""))
+                if r is base:
+                    continue
+                tagv = "bf16" if r["precision"] == "bf16" else "fused"
+                sp = r["steps_per_sec"] / base["steps_per_sec"]
+                speedup[f"{method}@{n}:{tagv}"] = round(sp, 2)
+                print(f"{method:10s} n={n:3d} speedup {tagv:8s}"
+                      f" {sp:7.2f}x  (vs fp32"
+                      + (":unfused)" if split else ")"))
 
     out = {"device": jax.devices()[0].device_kind,
            "n_devices": jax.device_count(),

@@ -176,6 +176,48 @@ def lm_adapter(model) -> SplitAdapter:
                         per_example_loss)
 
 
+PRECISIONS = ("fp32", "bf16")
+
+
+def cast_adapter(adapter: SplitAdapter, precision: str) -> SplitAdapter:
+    """Mixed-precision view of an adapter: compute in bf16, master in fp32.
+
+    With ``precision="bf16"`` every TRAINING segment application casts its
+    floating params and activations to bfloat16 before the underlying
+    ``apply_seg`` — so the forward/backward matmuls run in bf16 while the
+    params the optimizer owns (and therefore FedAvg client averaging and
+    the server-Adam moments) stay full fp32 masters: the cast sits inside
+    the loss, so ``jax.grad`` cotangents flow back through the ``astype``
+    and arrive fp32.  Losses are already reduced in fp32 by every adapter,
+    and evaluation (``train=False``) is untouched — clients score with
+    their own full-precision segments, matching the paper's eval protocol.
+
+    Boundary specs inherit the cast (train-time smashed activations ARE
+    bf16 on the wire), so transport byte accounting stays honest.
+    ``precision="fp32"`` returns the adapter unchanged.
+    """
+    if precision not in PRECISIONS:
+        raise ValueError(f"unknown precision {precision!r} "
+                         f"(one of {PRECISIONS})")
+    if precision == "fp32":
+        return adapter
+
+    def _cast(tree):
+        return jax.tree.map(
+            lambda l: l.astype(jnp.bfloat16)
+            if jnp.issubdtype(jnp.asarray(l).dtype, jnp.floating) else l,
+            tree)
+
+    inner = adapter.apply_seg
+
+    def apply_seg(seg, seg_params, x, batch, train=False):
+        if not train:
+            return inner(seg, seg_params, x, batch, train)
+        return inner(seg, _cast(seg_params), _cast(x), batch, train)
+
+    return dataclasses.replace(adapter, apply_seg=apply_seg)
+
+
 def leaf_bytes(tree) -> int:
     return int(sum(int(np.prod(l.shape)) * l.dtype.itemsize
                    for l in jax.tree.leaves(tree)))

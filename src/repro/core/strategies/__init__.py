@@ -9,7 +9,8 @@ from repro.core.strategies.splitfed import SplitFedV1, SplitFedV2, SplitFedV3
 
 def make_strategy(method: str, adapter, opt_factory, n_clients,
                   transport=None, privacy=None, engine="compiled",
-                  drop_remainder=True, shard=False, observe=None):
+                  drop_remainder=True, shard=False, observe=None,
+                  precision="fp32"):
     """method: centralized | fl | sl_{ac,am} | sflv{1,2,3}_{ac,am}.
 
     ``transport`` (repro.wire.Transport) compresses the cut-layer link of
@@ -41,7 +42,16 @@ def make_strategy(method: str, adapter, opt_factory, n_clients,
     inside the compiled programs as extra scan outputs: the whole run
     stays ONE dispatch and params are bit-identical to ``observe=None``.
     Results land on ``strategy.last_run_telemetry``.
+
+    ``precision`` (``"fp32"`` | ``"bf16"``) selects the training compute
+    dtype via ``core.partition.cast_adapter``: bf16 forward/backward with
+    fp32 master params and fp32 optimizer/aggregation accumulation.
+    Evaluation always runs full precision.  bf16 is parity-gated against
+    fp32 in tests/test_precision.py (AUROC tolerance, not bitwise — see
+    DESIGN.md §13).
     """
+    from repro.core.partition import cast_adapter
+    adapter = cast_adapter(adapter, precision)
     kw = dict(privacy=privacy, engine=engine,
               drop_remainder=drop_remainder, shard=shard, observe=observe)
     if method in ("centralized", "fl"):

@@ -546,6 +546,9 @@ def split_step_fn(adapter: SplitAdapter, opt_client: O.Optimizer,
     """
     nls = adapter.nls
     base_boundary = transport.boundary if transport is not None else None
+    # fusable codec: roundtrip+cut-noise as one kernel (bit-equal) when the
+    # transport allows it — boundary_with_key does the dispatch
+    fuse_codec = transport.fused_codec if transport is not None else None
     priv = (privacy if privacy is not None and
             (privacy.dp_enabled or privacy.cut_noise_std > 0) else None)
     if telemetry is not None:
@@ -571,7 +574,8 @@ def split_step_fn(adapter: SplitAdapter, opt_client: O.Optimizer,
                         if nls:
                             params["tail"] = both["c"]["tail"]
                         sink = []
-                        bnd = boundary_with_key(base_boundary, priv, k)
+                        bnd = boundary_with_key(base_boundary, priv, k,
+                                                codec=fuse_codec)
                         if want_cut:
                             bnd = T.observing_boundary(bnd, sink)
                         loss = adapter.full_loss(params, b, boundary=bnd)
@@ -598,7 +602,7 @@ def split_step_fn(adapter: SplitAdapter, opt_client: O.Optimizer,
                             params["tail"] = both["c"]["tail"]
                         sink = []
                         bnd = boundary_with_key(base_boundary, priv, k,
-                                                weights)
+                                                weights, codec=fuse_codec)
                         if want_cut:
                             bnd = T.observing_boundary(bnd, sink)
                         loss = adapter.full_loss(params, b, boundary=bnd,
@@ -637,7 +641,8 @@ def split_step_fn(adapter: SplitAdapter, opt_client: O.Optimizer,
                     params, b,
                     boundary=boundary_with_key(
                         base_boundary, priv, k,
-                        None if priv.dp_enabled else weights),
+                        None if priv.dp_enabled else weights,
+                        codec=fuse_codec),
                     weights=None if priv.dp_enabled else weights)
 
             if priv.dp_enabled:
@@ -743,6 +748,7 @@ def sflv3_step_fn(adapter: SplitAdapter, opt_client: O.Optimizer,
     import jax.numpy as jnp
     nls = adapter.nls
     boundary = transport.boundary if transport is not None else None
+    fuse_codec = transport.fused_codec if transport is not None else None
     priv = (privacy if privacy is not None and
             (privacy.dp_enabled or privacy.cut_noise_std > 0) else None)
     if telemetry is not None:
@@ -786,7 +792,8 @@ def sflv3_step_fn(adapter: SplitAdapter, opt_client: O.Optimizer,
                     if nls:
                         params["tail"] = both["c"]["tail"]
                     sink = []
-                    bnd = boundary_with_key(boundary, priv, k)
+                    bnd = boundary_with_key(boundary, priv, k,
+                                            codec=fuse_codec)
                     if want_cut:
                         bnd = T.observing_boundary(bnd, sink)
                     loss = adapter.full_loss(params, b, boundary=bnd)
@@ -850,7 +857,8 @@ def sflv3_step_fn(adapter: SplitAdapter, opt_client: O.Optimizer,
                 if nls:
                     params["tail"] = both["c"]["tail"]
                 return adapter.full_loss(
-                    params, b, boundary=boundary_with_key(boundary, priv, k))
+                    params, b, boundary=boundary_with_key(boundary, priv, k,
+                                                          codec=fuse_codec))
 
             vg = (dp_value_and_grad(loss_fn, priv) if priv.dp_enabled
                   else jax.value_and_grad(loss_fn))

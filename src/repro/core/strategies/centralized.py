@@ -148,7 +148,7 @@ class Centralized(Strategy):
         with self._span("dispatch"):
             out = run_fn(*args)
         self._count_dispatch()
-        self._last_run_invocation = (run_fn, args)
+        self._last_run_invocation = (run_fn, ENG.abstract_args(args))
         state["params"], state["opt"], losses = out[0], out[1], out[2]
         self._run_calls = getattr(self, "_run_calls", 0) + 1
         losses = np.asarray(losses)

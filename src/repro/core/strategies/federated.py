@@ -212,7 +212,7 @@ class FedAvg(Strategy):
             else:
                 state["params"], (losses, met) = run_fn(*args)
         self._count_dispatch()
-        self._last_run_invocation = (run_fn, args)
+        self._last_run_invocation = (run_fn, ENG.abstract_args(args))
         self._run_calls = getattr(self, "_run_calls", 0) + 1
         losses = np.asarray(losses)
         logs = []

@@ -280,7 +280,7 @@ class SplitFedV3(SplitLearning):
         with self._span("dispatch"):
             out = run_fn(*args)
         self._count_dispatch()
-        self._last_run_invocation = (run_fn, args)
+        self._last_run_invocation = (run_fn, ENG.abstract_args(args))
         (state["stacked_clients"], state["server"], state["c_opt"],
          state["s_opt"], losses) = out[:5]
         self._run_calls = getattr(self, "_run_calls", 0) + 1

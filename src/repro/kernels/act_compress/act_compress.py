@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
-from repro.kernels.compat import CompilerParams
+from repro.kernels.compat import INTERPRET, CompilerParams
 
 
 def _quant_kernel(x_ref, q_ref, s_ref):
@@ -37,7 +37,7 @@ def _dequant_kernel(q_ref, s_ref, o_ref):
         o_ref.dtype)
 
 
-def quantize_pallas(x, *, block_rows=256, interpret=True):
+def quantize_pallas(x, *, block_rows=256, interpret=INTERPRET):
     """x: (T, D) -> (int8 (T, D), f32 scale (T, 1))."""
     t, d = x.shape
     block_rows = min(block_rows, t)
@@ -58,7 +58,7 @@ def quantize_pallas(x, *, block_rows=256, interpret=True):
 
 
 def dequantize_pallas(q, scale, dtype=jnp.bfloat16, *, block_rows=256,
-                      interpret=True):
+                      interpret=INTERPRET):
     t, d = q.shape
     block_rows = min(block_rows, t)
     assert t % block_rows == 0

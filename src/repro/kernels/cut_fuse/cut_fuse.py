@@ -1,0 +1,116 @@
+"""Fused cut-layer kernel — int8 roundtrip + masked Gaussian noise.
+
+The SL/SFL hot path runs, per cut-layer crossing, the codec quantize, the
+dequantize, and (with ``PrivacyConfig.cut_noise_std``) a masked per-example
+Gaussian noise add as separate ops — three HBM round-trips for one logical
+transformation of the smashed activations.  This kernel fuses all of it:
+each grid cell reads one (block_rows, D) activation tile into VMEM, does the
+per-row absmax int8 quantize -> dequantize (identical arithmetic to
+``kernels/act_compress``) and adds the pre-scaled noise tile, writing only
+the final boundary payload.
+
+The Gaussian draws themselves stay OUTSIDE the kernel: bit-exactness with
+the unfused composition requires the exact ``jax.random.fold_in`` stream
+(threefry), which an in-kernel ``pltpu.prng_random_bits`` cannot reproduce.
+``privacy.dpsgd._leaf_noise`` draws AND std-scales the noise with the one
+shared subgraph both paths consume (sharing it is what keeps XLA's
+constant-merging rewrites identical across the two programs); the kernel
+applies the per-example pad mask and the final add in the same f32 op
+order — so the fused boundary is bit-identical to
+codec-roundtrip-then-noise.
+
+Tiling: grid over row blocks, one row per flattened example-row; the
+per-example pad mask enters as a (block_rows, 1) f32 weight column.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.compat import INTERPRET, CompilerParams
+
+
+def pin_product(v, zero_src):
+    """Force ``v``'s producing multiply to round before a following add.
+
+    XLA's CPU backend may contract ``mul + add`` chains into FMAs — one
+    rounding instead of two — and fusion duplicates producers, so neither
+    ``optimization_barrier`` nor a bitcast reliably splits the chain.  The
+    runtime zero cannot be constant-folded (strict IEEE: ``x * 0`` is
+    ``nan`` for non-finite x, and a ±0 addend's sign is data-dependent),
+    and if the compiler DOES contract, ``fma(a, b, ±0) == round(a * b)``
+    exactly — either way ``v`` rounds on its own.  ``zero_src`` must be
+    finite (activations/noise draws are).
+    """
+    return v + zero_src * 0.0
+
+
+def _int8_roundtrip(x):
+    """Per-row absmax int8 quantize + dequantize in f32 (VMEM-resident).
+
+    Must stay arithmetically identical to ``act_compress._quant_kernel`` +
+    ``_dequant_kernel`` — the fused boundary is gated on bit-exactness
+    against that composition.
+    """
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def _roundtrip_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = _int8_roundtrip(x).astype(o_ref.dtype)
+
+
+def _noise_kernel(x_ref, z_ref, w_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    z = z_ref[...]
+    # the dequant multiply and the mask multiply must each take their OWN
+    # f32 rounding before the final add, exactly as the unfused composition
+    # (dequant pinned at its kernel boundary, mask pinned in
+    # cut_noise_boundary) — see pin_product
+    r = pin_product(_int8_roundtrip(x), x).astype(o_ref.dtype)
+    z = pin_product(z * w_ref[...], z)
+    o_ref[...] = r + z.astype(o_ref.dtype)
+
+
+def roundtrip_pallas(x, *, block_rows=256, interpret=INTERPRET):
+    """x: (T, D) -> int8-roundtripped (T, D), one fused pass."""
+    t, d = x.shape
+    block_rows = min(block_rows, t)
+    assert t % block_rows == 0
+    grid = (t // block_rows,)
+    return pl.pallas_call(
+        _roundtrip_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(x)
+
+
+def noise_roundtrip_pallas(x, z, w, *, block_rows=256, interpret=INTERPRET):
+    """x: (T, D), z: f32 (T, D) pre-scaled noise, w: f32 (T, 1) row weights
+    -> roundtrip(x) + (z * w).astype(x.dtype), one fused pass."""
+    t, d = x.shape
+    block_rows = min(block_rows, t)
+    assert t % block_rows == 0
+    grid = (t // block_rows,)
+    return pl.pallas_call(
+        _noise_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+                  pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+                  pl.BlockSpec((block_rows, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(x, z, w)

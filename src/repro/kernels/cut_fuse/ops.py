@@ -1,0 +1,118 @@
+"""Jitted wrappers + STE for the fused cut-layer kernel.
+
+``roundtrip_boundary`` is the drop-in fused replacement for
+``act_compress.ops.compress_boundary`` (one pallas_call instead of a
+quantize + dequantize pair); ``cut_noise_roundtrip`` additionally folds the
+masked per-example Gaussian cut-noise add into the same pass.  Both
+backpropagate straight-through in ``x`` — the link is quantized and noised,
+client-side gradients stay full precision — and the noise/mask inputs get
+zero cotangents (their upstream is PRNG bits / the pad mask, never
+differentiated).
+
+The caller draws and std-scales ``z`` with the shared
+``privacy.dpsgd._leaf_noise`` subgraph (the identical fold_in stream the
+unfused path consumes); the mask multiply and the add run INSIDE the
+kernel with pinned per-op rounding, so fused == unfused bitwise (gated in
+tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cut_fuse.cut_fuse import (noise_roundtrip_pallas,
+                                             pin_product, roundtrip_pallas)
+from repro.kernels.compat import INTERPRET as _INTERPRET
+
+
+@jax.jit
+def fused_roundtrip(x):
+    """Per-row absmax int8 quantize+dequantize of ``x`` in one kernel."""
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    block = min(256, max(8, x2.shape[0]))
+    pad = (-x2.shape[0]) % block
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    out = roundtrip_pallas(x2, block_rows=block, interpret=_INTERPRET)
+    n = math.prod(shape[:-1])
+    return out[:n].reshape(shape)
+
+
+def _noise_impl(x, z, w):
+    """roundtrip(x) + (z * w_row).astype(x.dtype), fused.
+
+    ``z`` is the pre-scaled f32 noise (``dpsgd._leaf_noise``); ``w`` the
+    (B,) f32 per-example weight column — each flattened activation row
+    inherits its example's weight.  1-D leaves (several examples per
+    quantization row) fall back to roundtrip-then-add — same arithmetic,
+    still one roundtrip kernel.
+    """
+    shape = x.shape
+    if x.ndim < 2:
+        zw = pin_product(z * w, z)
+        return pin_product(fused_roundtrip(x), x) + zw.astype(x.dtype)
+    x2 = x.reshape(-1, shape[-1])
+    z2 = z.reshape(-1, shape[-1])
+    rows_per_example = math.prod(shape[1:-1])
+    w2 = jnp.repeat(w, rows_per_example).reshape(-1, 1)
+    block = min(256, max(8, x2.shape[0]))
+    pad = (-x2.shape[0]) % block
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+        z2 = jnp.pad(z2, ((0, pad), (0, 0)))
+        w2 = jnp.pad(w2, ((0, pad), (0, 0)))
+    out = noise_roundtrip_pallas(x2, z2, w2, block_rows=block,
+                                 interpret=_INTERPRET)
+    n = math.prod(shape[:-1])
+    return out[:n].reshape(shape)
+
+
+@jax.custom_vjp
+def cut_noise_fused(x, z, w):
+    return _noise_impl(x, z, w)
+
+
+def _fwd(x, z, w):
+    return _noise_impl(x, z, w), (z, w)
+
+
+def _bwd(res, g):
+    z, w = res
+    # straight-through in x; z/w come from PRNG bits / the pad mask
+    return (g, jnp.zeros_like(z), jnp.zeros_like(w))
+
+
+cut_noise_fused.defvjp(_fwd, _bwd)
+
+
+def cut_noise_roundtrip(x, z, weights=None):
+    """Fused codec-roundtrip + masked per-example cut noise for one leaf.
+
+    x: (B, ...) boundary activation leaf; z: pre-scaled f32 noise of
+    ``x.shape`` drawn by ``dpsgd._leaf_noise`` (the unfused fold_in
+    stream); weights: optional (B,) 0/1 validity mask (pad-and-mask rows).
+    """
+    b = x.shape[0]
+    w = (jnp.ones((b,), jnp.float32) if weights is None
+         else weights.astype(jnp.float32))
+    return cut_noise_fused(x, z, w)
+
+
+@jax.custom_vjp
+def roundtrip_boundary(x):
+    return fused_roundtrip(x)
+
+
+def _rt_fwd(x):
+    return roundtrip_boundary(x), None
+
+
+def _rt_bwd(_, g):
+    return (g,)       # straight-through
+
+
+roundtrip_boundary.defvjp(_rt_fwd, _rt_bwd)

@@ -1,0 +1,26 @@
+"""Eager oracle for the fused cut-layer kernel.
+
+``noise_roundtrip_ref`` is codec-roundtrip-then-noise in the op order of
+``wire.codec.Int8Codec.roundtrip`` followed by
+``privacy.dpsgd.cut_noise_boundary``.  The fused kernel's BIT-equality gate
+runs against the unfused IN-GRAPH composition (same execution mode on both
+sides — see tests/test_kernels.py); this pure-eager oracle is a closeness
+gate, since jit may strength-reduce the quantizer division by 1 ulp.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.act_compress.ref import roundtrip_ref
+
+
+def noise_roundtrip_ref(x, z, std: float, weights=None):
+    """x: (B, ...); z: f32 standard normal, x.shape; weights: (B,) or None."""
+    r = roundtrip_ref(x)
+    z = float(std) * z
+    if weights is not None:
+        b = x.shape[0]
+        z = z * weights.astype(jnp.float32).reshape(
+            (b,) + (1,) * (x.ndim - 1))
+    return r + z.astype(x.dtype)

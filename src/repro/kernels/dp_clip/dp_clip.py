@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.compat import CompilerParams
+from repro.kernels.compat import INTERPRET, CompilerParams
 
 
 def _sqnorm_kernel(g_ref, out_ref):
@@ -41,7 +41,7 @@ def _scale_accum_kernel(g_ref, s_ref, out_ref):
     out_ref[...] = jnp.sum(g * s_ref[...], axis=0, keepdims=True)
 
 
-def sqnorms_pallas(g, *, block_d=512, interpret=True):
+def sqnorms_pallas(g, *, block_d=512, interpret=INTERPRET):
     """g: (B, D) -> (B, 1) f32 per-example sums of squares."""
     b, d = g.shape
     block_d = min(block_d, d)
@@ -59,7 +59,7 @@ def sqnorms_pallas(g, *, block_d=512, interpret=True):
     )(g)
 
 
-def scale_accum_pallas(g, scales, *, block_d=512, interpret=True):
+def scale_accum_pallas(g, scales, *, block_d=512, interpret=INTERPRET):
     """g: (B, D), scales: (B, 1) -> (1, D) f32 of sum_b scales[b] * g[b]."""
     b, d = g.shape
     block_d = min(block_d, d)

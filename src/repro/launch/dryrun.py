@@ -39,8 +39,21 @@ from repro.launch.train import (get_axes_tree, init_sflv3_params,
 from repro.models.transformer import TransformerLM
 from repro.serving.engine import make_decode_step, make_prefill_step
 
-# TPU v5e hardware constants (per chip)
-HW = {"peak_flops": 197e12, "hbm_bw": 819e9, "ici_bw": 50e9}
+# Per-chip/-host hardware peaks the roofline terms divide by.  Keyed so a
+# CPU smoke run can label its roofline honestly instead of pretending its
+# numbers sit on a TPU's ceilings; ``cpu_host`` is a nominal modern server
+# (AVX-512 f32 FMA, dual-socket DDR5, 100 GbE interconnect).
+HW_TABLE = {
+    "tpu_v5e": {"peak_flops": 197e12, "hbm_bw": 819e9, "ici_bw": 50e9},
+    "cpu_host": {"peak_flops": 2e12, "hbm_bw": 200e9, "ici_bw": 12.5e9},
+}
+HW = HW_TABLE["tpu_v5e"]              # historical default (TPU v5e, per chip)
+
+
+def default_hw() -> str:
+    """The HW_TABLE key matching the current jax backend."""
+    import jax
+    return "tpu_v5e" if jax.default_backend() == "tpu" else "cpu_host"
 
 _DT_BYTES = {"f64": 8, "s64": 8, "u64": 8, "c64": 8, "f32": 4, "s32": 4,
              "u32": 4, "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1,
@@ -216,15 +229,20 @@ def run_combo(arch_id: str, shape_name: str, multi_pod: bool,
     return rec
 
 
-def roofline_terms(rec: dict, mesh_chips: int) -> dict:
+def roofline_terms(rec: dict, mesh_chips: int, hw=None) -> dict:
     """The three roofline terms in seconds (single-pod table; DESIGN.md §5).
     cost_analysis FLOPs/bytes are per-device program numbers on the
-    partitioned module; collective bytes are per-device link traffic."""
+    partitioned module; collective bytes are per-device link traffic.
+    ``hw``: an ``HW_TABLE`` key or peaks dict (default: TPU v5e)."""
+    if hw is None:
+        hw = HW
+    elif isinstance(hw, str):
+        hw = HW_TABLE[hw]
     coll = rec.get("collectives", {})
     coll_b = sum(v for k, v in coll.items() if k != "counts")
-    t_compute = rec.get("hlo_flops", 0.0) / HW["peak_flops"]
-    t_memory = rec.get("hlo_bytes", 0.0) / HW["hbm_bw"]
-    t_coll = coll_b / HW["ici_bw"]
+    t_compute = rec.get("hlo_flops", 0.0) / hw["peak_flops"]
+    t_memory = rec.get("hlo_bytes", 0.0) / hw["hbm_bw"]
+    t_coll = coll_b / hw["ici_bw"]
     dom = max((("compute", t_compute), ("memory", t_memory),
                ("collective", t_coll)), key=lambda kv: kv[1])[0]
     return {"t_compute": t_compute, "t_memory": t_memory,

@@ -63,6 +63,22 @@ def hlo_cost(strategy) -> dict | None:
     compiled = lowered.compile()
     compile_s = time.perf_counter() - t0
     cost = hlo_analysis.analyze(compiled.as_text())
+    # compiler's own buffer-assignment view: temp (peak scratch), argument,
+    # output and donation-aliased bytes — the donated whole-run programs
+    # show their HBM saving in alias_size vs argument_size
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for f in ("temp_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            v = getattr(ma, f, None)
+            if v is not None:
+                mem[f] = int(v)
+    except Exception:
+        pass                       # backend without memory_analysis support
+    if mem:
+        cost = {**cost, "memory": mem}
     return {"compile_seconds": compile_s, **cost}
 
 

@@ -192,7 +192,32 @@ def dp_value_and_grad(loss_fn, cfg: PrivacyConfig, has_aux=False,
     return fn
 
 
-def cut_noise_boundary(base_boundary, cut_noise_std: float):
+def _leaf_noise(l, lk, std: float):
+    """Per-example std-scaled Gaussian draws for one payload leaf.
+
+    Example ``j`` draws ``normal(fold_in(lk, j), l.shape[1:])`` — like
+    ``example_keys``, a real example's draw depends on its position, never
+    on the batch LENGTH, so a pad-and-mask padded remainder batch noises
+    its real rows exactly as the stepwise short batch does.
+
+    This is the ONE noise subgraph both the fused and unfused cut-noise
+    paths consume, scaling included: ``normal`` ends in its own constant
+    multiply (erfinv output times sqrt(2)), and XLA's algebraic simplifier
+    merges adjacent constant multiplies program-dependently — keeping the
+    draw and the ``std`` scale in one shared function (and pinning the
+    scale's rounding, see ``pin_product``) is what makes the two paths
+    bit-equal regardless of the surrounding program.
+    """
+    from repro.kernels.cut_fuse.cut_fuse import pin_product
+    b = l.shape[0]
+    ks = jax.vmap(lambda i: jax.random.fold_in(lk, i))(
+        jnp.arange(b, dtype=jnp.uint32))
+    z0 = jax.vmap(
+        lambda k: jax.random.normal(k, l.shape[1:], jnp.float32))(ks)
+    return pin_product(float(std) * z0, z0)
+
+
+def cut_noise_boundary(base_boundary, cut_noise_std: float, codec=None):
     """Wrap a transport boundary fn with additive Gaussian cut-layer noise.
 
     Returns ``fn(tree, key, weights=None)``; noise rides AFTER the codec
@@ -200,50 +225,68 @@ def cut_noise_boundary(base_boundary, cut_noise_std: float):
     (and the leakage probe) only ever sees the noised payload.
 
     Draws are PER-EXAMPLE: leaf ``l`` of the payload gets key
-    ``fold_in(key, leaf_idx)`` and example ``j`` in the batch draws
-    ``normal(fold_in(leaf_key, j), l.shape[1:])`` — like ``example_keys``,
-    the draw for a real example depends on its position, never on the
-    batch LENGTH, so a pad-and-mask padded remainder batch noises its real
-    rows exactly as the stepwise short batch does (this is what lets the
-    compiled engine keep ``drop_remainder=False`` with cut-layer noise and
-    no DP).  ``weights`` (optional (B,) 0/1 validity) zeroes the noise on
-    padded rows so the shipped payload stays clean there.
+    ``fold_in(key, leaf_idx)`` and per-example draws via ``_leaf_noise``
+    (this is what lets the compiled engine keep ``drop_remainder=False``
+    with cut-layer noise and no DP).  ``weights`` (optional (B,) 0/1
+    validity) zeroes the noise on padded rows so the shipped payload stays
+    clean there.
+
+    With a fusable ``codec`` (``Int8Codec``), the roundtrip AND the masked
+    noise add run as ONE Pallas kernel per leaf
+    (``kernels/cut_fuse``): the kernel consumes the identical
+    ``_leaf_noise`` stream and applies ``zz * weight`` in the same f32 op
+    order, so fused == unfused bitwise.  ``base_boundary`` is skipped —
+    the fused op IS the codec roundtrip; analytic byte accounting is
+    untouched.
     """
     std = float(cut_noise_std)
+    fused_rt = getattr(codec, "fused_noise_roundtrip", None) \
+        if codec is not None else None
 
     def fn(tree, key, weights=None):
-        if base_boundary is not None:
+        from repro.kernels.cut_fuse.cut_fuse import pin_product
+        if fused_rt is None and base_boundary is not None:
             tree = base_boundary(tree)
         leaves, treedef = jax.tree.flatten(tree)
         noised = []
         for li, l in enumerate(leaves):
             lk = jax.random.fold_in(key, jnp.uint32(li))
+            zz = _leaf_noise(l, lk, std)
+            if fused_rt is not None:
+                noised.append(fused_rt(l, zz, weights))
+                continue
             b = l.shape[0]
-            ks = jax.vmap(lambda i: jax.random.fold_in(lk, i))(
-                jnp.arange(b, dtype=jnp.uint32))
-            z = jax.vmap(
-                lambda k: jax.random.normal(k, l.shape[1:], jnp.float32))(ks)
-            z = std * z
+            # pin each multiply's own f32 rounding: XLA:CPU may otherwise
+            # contract the codec-dequant or mask multiply into the final
+            # add as an FMA, and whether it does depends on the
+            # surrounding program — the fused kernel pins the same
+            # intermediates, keeping the two paths bit-equal everywhere
             if weights is not None:
-                z = z * weights.astype(jnp.float32).reshape(
-                    (b,) + (1,) * (l.ndim - 1))
-            noised.append(l + z.astype(l.dtype))
+                zw = pin_product(
+                    zz * weights.astype(jnp.float32).reshape(
+                        (b,) + (1,) * (l.ndim - 1)), zz)
+            else:
+                zw = zz
+            noised.append(pin_product(l, zz.astype(l.dtype))
+                          + zw.astype(l.dtype))
         return jax.tree.unflatten(treedef, noised)
 
     return fn
 
 
-def boundary_with_key(base_boundary, cfg: PrivacyConfig, key, weights=None):
+def boundary_with_key(base_boundary, cfg: PrivacyConfig, key, weights=None,
+                      codec=None):
     """Bind a step key into a ``boundary(tree)`` hook for full_loss.
 
     Each boundary crossing folds a fresh trace-time counter into ``key`` so
     front->middle and middle->tail draws are independent.  ``weights``
     (per-example pad-mask, compiled engine only) masks the noise on padded
-    rows — see ``cut_noise_boundary``.
+    rows; a fusable ``codec`` routes roundtrip+noise through the single
+    fused kernel — see ``cut_noise_boundary``.
     """
     if cfg is None or cfg.cut_noise_std <= 0:
         return base_boundary
-    noised = cut_noise_boundary(base_boundary, cfg.cut_noise_std)
+    noised = cut_noise_boundary(base_boundary, cfg.cut_noise_std, codec)
     crossing = [0]
 
     def fn(tree):

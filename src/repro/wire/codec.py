@@ -46,6 +46,10 @@ class Codec:
     """One boundary leaf -> on-wire payload -> reconstruction."""
 
     name: str = "codec"
+    #: True when ``kernels/cut_fuse`` implements this codec's roundtrip as a
+    #: single fused Pallas pass (optionally folding in cut-layer noise).
+    #: ``Transport.fused_codec`` gates on it; wire_bytes stays analytic.
+    fusable: bool = False
 
     def encode(self, x):
         """Leaf array -> pytree of payload arrays (what ships)."""
@@ -121,6 +125,7 @@ class Int8Codec(Codec):
     """Per-row absmax int8 + f32 row scale (Pallas kernel, ~4x vs f32)."""
 
     name = "int8"
+    fusable = True
 
     def encode(self, x):
         from repro.kernels.act_compress.ops import quantize
@@ -138,6 +143,22 @@ class Int8Codec(Codec):
     def roundtrip(self, x):
         from repro.kernels.act_compress.ops import compress_boundary
         return compress_boundary(x)
+
+    # -- fused path (kernels/cut_fuse) --------------------------------------
+    def fused_roundtrip(self, x):
+        """Quantize+dequantize in ONE Pallas pass (bit-equal to roundtrip)."""
+        from repro.kernels.cut_fuse.ops import roundtrip_boundary
+        return roundtrip_boundary(x)
+
+    def fused_noise_roundtrip(self, x, zz, weights=None):
+        """Roundtrip + masked pre-scaled cut noise, one fused pass.
+
+        ``zz`` must come from ``privacy.dpsgd._leaf_noise`` — the fused
+        kernel consumes that exact stream, keeping it bit-equal to
+        roundtrip-then-``cut_noise_boundary``.
+        """
+        from repro.kernels.cut_fuse.ops import cut_noise_roundtrip
+        return cut_noise_roundtrip(x, zz, weights)
 
 
 class TopKCodec(Codec):

@@ -51,6 +51,11 @@ class EpochSchedule:
 @dataclasses.dataclass
 class Transport:
     codec: Codec
+    #: allow the cut-layer boundary to run as ONE fused Pallas kernel when
+    #: the codec supports it (``Codec.fusable``) — roundtrip and cut noise
+    #: in a single pass, bit-equal to the unfused composition.  Accounting
+    #: is analytic either way; set False to force the unfused reference.
+    fuse: bool = True
     bytes_on_wire: float = 0.0
     bytes_raw: float = 0.0
     steps: int = 0
@@ -62,8 +67,20 @@ class Transport:
 
     # -- in-graph ------------------------------------------------------------
     def boundary(self, tree):
-        """Encode+decode every leaf crossing a segment boundary."""
+        """Encode+decode every leaf crossing a segment boundary.
+
+        With ``fuse`` and a fusable codec the quantize+dequantize pair runs
+        as one ``kernels/cut_fuse`` pass — bit-equal, half the HBM traffic.
+        """
+        if self.fuse and self.codec.fusable:
+            return jax.tree.map(self.codec.fused_roundtrip, tree)
         return tree_roundtrip(self.codec, tree)
+
+    @property
+    def fused_codec(self):
+        """The codec when roundtrip+noise may fuse into one kernel, else
+        None — what the step builders hand ``privacy.boundary_with_key``."""
+        return self.codec if self.fuse and self.codec.fusable else None
 
     # -- host-side accounting ------------------------------------------------
     @staticmethod

@@ -113,3 +113,106 @@ def test_compress_boundary_gradient_is_identity():
     # STE: d/dx [stopgrad-ish roundtrip(x) * x] = roundtrip(x) + x
     expect = compress_boundary(x) + x
     np.testing.assert_allclose(np.asarray(g), np.asarray(expect), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# cut_fuse: fused roundtrip(+noise) vs the unfused composition — BIT equality
+# ---------------------------------------------------------------------------
+# The fused kernel is gated on exact equality against the unfused path
+# WITHIN each execution mode (eager and jit separately).  Eager-vs-jit may
+# differ by 1 ulp for std != 1 because XLA constant-merges the normal()
+# sqrt(2) with the std scale only under jit — identically for both paths,
+# so the fused/unfused comparison stays exact in either mode.
+
+from repro.kernels.cut_fuse.cut_fuse import pin_product
+from repro.kernels.cut_fuse.ops import (cut_noise_roundtrip, fused_roundtrip,
+                                        roundtrip_boundary)
+from repro.kernels.cut_fuse.ref import noise_roundtrip_ref
+from repro.privacy.dpsgd import _leaf_noise, cut_noise_boundary
+from repro.wire.codec import Int8Codec
+
+CUT_SHAPES = [(8, 32), (7, 16), (6, 4, 4, 8)]      # (7, 16) pads the grid
+
+
+def _bits(x):
+    a = np.asarray(x)
+    return a.view(np.uint8 if a.dtype.itemsize == 1 else
+                  {2: np.uint16, 4: np.uint32}[a.dtype.itemsize])
+
+
+@pytest.mark.parametrize("shape", CUT_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cut_fuse_roundtrip_bit_equal(shape, dtype):
+    x = (jax.random.normal(jax.random.key(0), shape) * 3).astype(dtype)
+    for f in (lambda a: (fused_roundtrip(a), compress_boundary(a)),
+              jax.jit(lambda a: (fused_roundtrip(a), compress_boundary(a)))):
+        fused, unfused = f(x)
+        assert fused.dtype == x.dtype
+        np.testing.assert_array_equal(_bits(fused), _bits(unfused))
+
+
+@pytest.mark.parametrize("shape", CUT_SHAPES)
+@pytest.mark.parametrize("std", [0.37, 1.0])
+@pytest.mark.parametrize("masked", [False, True])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cut_fuse_noise_bit_equal(shape, std, masked, dtype):
+    codec = Int8Codec()
+    x = (jax.random.normal(jax.random.key(1), shape) * 3).astype(dtype)
+    w = None
+    if masked:       # remainder batch: trailing rows are padding
+        w = (jnp.arange(shape[0]) < shape[0] - 2).astype(jnp.float32)
+    unfused = cut_noise_boundary(lambda t: jax.tree.map(codec.roundtrip, t),
+                                 std, codec=None)
+    fused = cut_noise_boundary(None, std, codec=codec)
+    key = jax.random.key(5)
+
+    def u(t, k):
+        return unfused(t, k, w)
+
+    def f(t, k):
+        return fused(t, k, w)
+
+    for a_fn, b_fn in ((u, f), (jax.jit(u), jax.jit(f))):
+        a, b = a_fn(x, key), b_fn(x, key)
+        assert b.dtype == x.dtype
+        np.testing.assert_array_equal(_bits(a), _bits(b))
+    if masked:       # padded rows ship the CLEAN roundtrip, no noise
+        noised = f(x, key)
+        clean = fused_roundtrip(x)
+        np.testing.assert_array_equal(_bits(noised[-2:]), _bits(clean[-2:]))
+
+
+@pytest.mark.parametrize("shape", [(8, 32), (7, 16)])
+def test_cut_fuse_matches_ref_oracle(shape):
+    """Fused stays within float-rounding of the pure-eager oracle.
+
+    Bit equality is gated against the unfused IN-GRAPH composition above;
+    the eager ``ref`` oracle may differ by 1 ulp where jit strength-reduces
+    the quantizer division, so this gate is closeness, not bits."""
+    std = 0.37
+    x = jax.random.normal(jax.random.key(2), shape) * 3
+    lk = jax.random.fold_in(jax.random.key(6), jnp.uint32(0))
+    ks = jax.vmap(lambda i: jax.random.fold_in(lk, i))(
+        jnp.arange(shape[0], dtype=jnp.uint32))
+    z0 = jax.vmap(lambda k: jax.random.normal(k, shape[1:], jnp.float32))(ks)
+    zz = _leaf_noise(x, lk, std)           # pre-scaled, the fused input
+    np.testing.assert_array_equal(np.asarray(zz), np.asarray(std * z0))
+    fused = cut_noise_roundtrip(x, zz)
+    ref = noise_roundtrip_ref(x, z0, std)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(ref),
+                               atol=1e-6, rtol=0)
+
+
+def test_cut_fuse_ste_gradients():
+    x = jax.random.normal(jax.random.key(3), (8, 32))
+    z = jax.random.normal(jax.random.key(4), (8, 32))
+    w = jnp.ones((8,), jnp.float32)
+    g = jax.grad(lambda a: (cut_noise_roundtrip(a, z, w) * a).sum())(x)
+    expect = cut_noise_roundtrip(x, z, w) + x
+    np.testing.assert_allclose(np.asarray(g), np.asarray(expect), atol=1e-5)
+    gz = jax.grad(lambda a: cut_noise_roundtrip(x, a, w).sum())(z)
+    assert not np.asarray(gz).any()        # PRNG bits are not differentiated
+    g2 = jax.grad(lambda a: (roundtrip_boundary(a) * a).sum())(x)
+    np.testing.assert_allclose(np.asarray(g2),
+                               np.asarray(roundtrip_boundary(x) + x),
+                               atol=1e-5)

@@ -1,0 +1,103 @@
+"""Mixed-precision gates (DESIGN.md §13): bf16 compute, fp32 masters.
+
+``make_strategy(..., precision="bf16")`` casts segment params and boundary
+activations to bfloat16 for TRAINING forward/backward only; master params,
+optimizer state, FedAvg / server-Adam accumulation and all EVAL passes stay
+fp32.  Gates here: masters never leave fp32, eval is precision-independent,
+and the smoke-config AUROC lands within the stated |Δ| <= 0.05 of fp32.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim as O
+from repro.core.partition import PRECISIONS, cast_adapter, cnn_adapter
+from repro.core.strategies import make_strategy
+from repro.data.synthetic import make_cxr_clients
+from repro.models.cnn import DenseNetConfig, build_densenet
+
+
+@pytest.fixture(scope="module")
+def setup():
+    clients = make_cxr_clients(seed=0, n_clients=3, train_per_client=24,
+                               val_per_client=8, test_per_client=16,
+                               image_size=16)
+    cfg = DenseNetConfig(growth=4, blocks=(1, 1), stem_ch=8, cut_layer=1)
+    return clients, cnn_adapter(build_densenet(cfg))
+
+
+def _train_eval(method, precision, clients, adapter, epochs=2):
+    st = make_strategy(method, adapter, lambda: O.adam(1e-3), len(clients),
+                       precision=precision)
+    state = st.setup(jax.random.key(0))
+    state, logs = st.run(state, [c.train for c in clients],
+                         np.random.default_rng(0), 4, epochs)
+    m = st.evaluate(state, clients, "test", batch_size=8)
+    return st, state, logs, m
+
+
+# ---------------------------------------------------------------------------
+# cast_adapter unit behavior
+# ---------------------------------------------------------------------------
+
+def test_cast_adapter_fp32_is_identity(setup):
+    _, adapter = setup
+    assert cast_adapter(adapter, "fp32") is adapter
+
+
+def test_cast_adapter_rejects_unknown_precision(setup):
+    clients, adapter = setup
+    with pytest.raises(ValueError):
+        cast_adapter(adapter, "fp16")
+    with pytest.raises(ValueError):
+        make_strategy("sl_am", adapter, lambda: O.adam(1e-3), len(clients),
+                      precision="tf32")
+    assert "bf16" in PRECISIONS
+
+
+def test_cast_adapter_train_only(setup):
+    """train=True computes in bf16; train=False (eval) stays full precision."""
+    clients, adapter = setup
+    bf = cast_adapter(adapter, "bf16")
+    params = adapter.init(jax.random.key(0))
+    batch = {k: v[:4] for k, v in clients[0].train.items()}
+    seg = adapter.seg_names[0]
+    x = adapter.inputs(batch)
+    train_out = bf.apply_seg(seg, params[seg], x, batch, True)
+    eval_out = bf.apply_seg(seg, params[seg], x, batch, False)
+    assert all(l.dtype == jnp.bfloat16
+               for l in jax.tree.leaves(train_out)
+               if jnp.issubdtype(l.dtype, jnp.floating))
+    np.testing.assert_array_equal(
+        np.asarray(jax.tree.leaves(eval_out)[0], np.float32),
+        np.asarray(jax.tree.leaves(
+            adapter.apply_seg(seg, params[seg], x, batch, False))[0],
+            np.float32))
+
+
+# ---------------------------------------------------------------------------
+# strategy-level gates
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["fl", "sl_am"])
+def test_bf16_masters_stay_fp32(method, setup):
+    clients, adapter = setup
+    st, state, logs, m = _train_eval(method, "bf16", clients, adapter,
+                                     epochs=1)
+    for i in range(len(clients)):
+        for l in jax.tree.leaves(st.params_for_eval(state, i)):
+            assert l.dtype in (jnp.float32, jnp.int32), l.dtype
+    assert all(np.isfinite(l.losses).all() for l in logs)
+    assert 0.0 <= m["auroc"] <= 1.0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method", ["fl", "sl_am", "sflv2_ac"])
+def test_bf16_auroc_within_tolerance(method, setup):
+    """The §13 acceptance gate: |AUROC(bf16) - AUROC(fp32)| <= 0.05."""
+    clients, adapter = setup
+    _, _, _, m32 = _train_eval(method, "fp32", clients, adapter)
+    _, _, _, m16 = _train_eval(method, "bf16", clients, adapter)
+    assert abs(m16["auroc"] - m32["auroc"]) <= 0.05, (m16, m32)

@@ -216,3 +216,31 @@ def test_quantize_roundtrip_bound(rows, cols, scale):
     rt = np.asarray(roundtrip_ref(jnp.asarray(x)))
     amax = np.abs(x).max(axis=1, keepdims=True)
     assert (np.abs(rt - x) <= amax / 127.0 + 1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# wire accounting: wire_bytes(spec) == the ACTUAL encoded payload bytes
+# ---------------------------------------------------------------------------
+
+@_settings
+@given(st.integers(1, 7), st.integers(1, 65),
+       st.sampled_from(["identity", "bf16", "int8", "topk:0.1", "topk:0.37",
+                        "topk:1.0"]),
+       st.sampled_from(["float32", "bfloat16"]),
+       st.booleans())
+def test_wire_bytes_matches_encoded_payload(rows, cols, name, dtype, three_d):
+    """Table-4 byte accounting is analytic — gate it against what the
+    codec's ``encode`` payload ACTUALLY occupies, leaf-exact (including
+    the int8 per-row f32 scales and topk's int32 index bytes)."""
+    from repro.wire.codec import make_codec
+    codec = make_codec(name)
+    shape = (rows, 2, cols) if three_d else (rows, cols)
+    x = jnp.asarray(np.random.default_rng(1).normal(0, 2, shape),
+                    jnp.dtype(dtype))
+    payload = codec.encode(x)
+    actual = sum(int(np.asarray(l).nbytes)
+                 for l in jax.tree.leaves(payload))
+    spec = jax.ShapeDtypeStruct(x.shape, x.dtype)
+    assert codec.wire_bytes(spec) == actual
+    assert codec.compression_ratio(spec) == pytest.approx(
+        x.nbytes / actual)
