@@ -54,6 +54,14 @@ and speedup keys.  Run it under
 multi-device host; on one device shard=True is a no-op and the column
 just duplicates the compiled numbers.
 
+``--participation`` adds the cross-device column: fl compiled whole-runs
+with ``Participation(n_global=N, k=10)`` at N in {100, 1000} — fixed-K
+cohorts packed into a K-slot axis, so steps/s should stay roughly flat
+in N (the ``fl@1000:part_scale`` speedup key records the N=1000/N=100
+ratio).  ``--participation-only`` runs just this column and merges its
+rows into an existing ``--out`` JSON (the full grid is expensive; the
+participation column can be refreshed alone).
+
 ``--check-against BENCH.json`` re-reads a committed baseline and FAILS
 (exit 1) if any matching compiled-vs-stepwise speedup regressed by more
 than 20%.  Speedups are regime-sensitive (steps per epoch change how far
@@ -243,6 +251,64 @@ def time_raw_grid(method, clients, adapter, batch_size, run_epochs, reps,
     return rows
 
 
+PART_CLIENTS = [100, 1000]
+PART_K = 10
+
+
+def time_participation(n_global, k, batch_size, run_epochs, reps):
+    """Cross-device column: fl with ``Participation(n_global, k)`` — each
+    round trains a K-hospital cohort out of N enrolled.  The compiled
+    run packs cohorts into a fixed K-slot axis, so steps/s should be
+    roughly FLAT in N (compute scales with K; only host-side packing
+    and data bookkeeping grow with N) — the ``:part_scale`` speedup key
+    gates that ratio.  Tiny per-hospital data keeps the N=1000 setup
+    affordable on CPU."""
+    from repro.core.participation import Participation
+    clients, adapter = build_setup(n_global, 16, image_size=8)
+    strat = make_strategy("fl", adapter, lambda: O.adam(1e-3), n_global,
+                          participation=Participation(n_global=n_global,
+                                                      k=k))
+    state = strat.setup(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    data = [c.train for c in clients]
+    t0 = time.perf_counter()
+    state, logs = strat.run(state, data, rng, batch_size, run_epochs)
+    first_call = time.perf_counter() - t0
+    times = []
+    for _ in range(reps):
+        jax.block_until_ready(jax.tree.leaves(state["params"])[0])
+        t0 = time.perf_counter()
+        state, logs = strat.run(state, data, rng, batch_size, run_epochs)
+        jax.block_until_ready(jax.tree.leaves(state["params"])[0])
+        times.append(time.perf_counter() - t0)
+    sec = float(np.median(times))
+    steps = sum(l.steps for l in logs)
+    return {"method": "fl", "n_clients": n_global, "engine": "compiled",
+            "mode": f"run{run_epochs}:part", "shard": False,
+            "participation_k": k, "steps_per_epoch": steps,
+            "epoch_seconds": sec, "compile_seconds": first_call - sec,
+            "dispatches_per_run": strat._dispatches // (reps + 1),
+            "steps_per_sec": steps / sec if sec > 0 else float("inf")}
+
+
+def run_participation_grid(batch_size, run_epochs, reps):
+    rows, part = [], {}
+    for n in PART_CLIENTS:
+        r = time_participation(n, PART_K, batch_size, run_epochs, reps)
+        rows.append(r)
+        part[f"fl@{n}:k{PART_K}"] = round(r["steps_per_sec"], 1)
+        print(f"{'fl':10s} n={n:4d} part(K={PART_K})    "
+              f"run{run_epochs:<3d} {r['steps_per_sec']:9.1f} steps/s "
+              f"({r['epoch_seconds'] * 1e3:8.1f} ms, "
+              f"{r['dispatches_per_run']} dispatch/run)")
+    lo, hi = PART_CLIENTS[0], PART_CLIENTS[-1]
+    scale = (part[f"fl@{hi}:k{PART_K}"]
+             / max(part[f"fl@{lo}:k{PART_K}"], 1e-9))
+    print(f"{'fl':10s} part scaling N={hi} vs N={lo}: {scale:5.2f}x "
+          "(fixed-K cohorts: ~flat in N)")
+    return rows, part, round(scale, 2)
+
+
 def check_telemetry_overhead(overhead: dict,
                              max_overhead: float = 0.05) -> list[str]:
     """Gate the steady-state cost of telemetry: an observed run's steps/s
@@ -300,6 +366,13 @@ def main():
                     help="fail when an observed compiled run's steady-"
                          "state steps/s falls more than this fraction "
                          "below the unobserved run's")
+    ap.add_argument("--participation", action="store_true",
+                    help="also time fl with Participation(N, k=10) at "
+                         f"N in {PART_CLIENTS} (compiled whole-run; "
+                         "steps/s should stay ~flat in N)")
+    ap.add_argument("--participation-only", action="store_true",
+                    help="run ONLY the participation column and merge "
+                         "its rows/keys into an existing --out JSON")
     ap.add_argument("--shard", action="store_true",
                     help="also time the compiled engine with shard=True "
                          "(hospital axis on the hosp device mesh; run "
@@ -307,6 +380,29 @@ def main():
                          "device_count=N or on a multi-device host); "
                          "recorded as ':shard' speedup keys")
     args = ap.parse_args()
+
+    epochs_po = args.epochs or (1 if args.smoke else 2)
+    if args.participation_only:
+        rows, part, scale = run_participation_grid(args.batch,
+                                                   args.run_epochs,
+                                                   epochs_po)
+        out = {}
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                out = json.load(f)
+        out.setdefault("results", [])
+        out["results"] = [r for r in out["results"]
+                          if "part" not in r.get("mode", "")] + rows
+        out["participation"] = part
+        out.setdefault("speedup", {})[
+            f"fl@{PART_CLIENTS[-1]}:part_scale"] = scale
+        out_dir = os.path.dirname(args.out)
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"merged participation column into {args.out}")
+        return
 
     methods = (args.methods.split(",") if args.methods
                else (["fl"] if args.smoke else DEFAULT_METHODS))
@@ -423,6 +519,12 @@ def main():
            "epochs_timed": epochs, "run_epochs": args.run_epochs,
            "results": results, "speedup": speedup,
            "telemetry_overhead": overhead}
+    if args.participation:
+        rows, part, scale = run_participation_grid(args.batch,
+                                                   args.run_epochs, epochs)
+        out["results"] += rows
+        out["participation"] = part
+        speedup[f"fl@{PART_CLIENTS[-1]}:part_scale"] = scale
     out_dir = os.path.dirname(args.out)
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)

@@ -29,7 +29,7 @@ import glob
 import json
 import os
 
-from repro.launch.dryrun import HW, HW_TABLE, default_hw, roofline_terms
+from repro.launch.dryrun import HW_TABLE, default_hw, roofline_terms
 
 
 def param_counts(cfg):

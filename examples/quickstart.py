@@ -32,6 +32,9 @@ def main():
         # per-batch host loop; both train identically).  observe= taps
         # per-round telemetry (grad/update norms, cut-layer activation
         # stats) inside that one program — params stay bit-identical.
+        # For cross-device federations, participation=Participation(
+        # n_global=N, k=K) trains a K-hospital cohort per round (still
+        # one program; compute scales with K, not N) — see DESIGN.md §14.
         strat = make_strategy(method, adapter, lambda: O.adam(3e-4),
                               n_clients=len(clients),
                               observe=Telemetry())

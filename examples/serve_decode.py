@@ -8,7 +8,6 @@ O(1)-state decode path).
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.registry import REGISTRY
 from repro.models.transformer import TransformerLM

@@ -1,0 +1,401 @@
+"""Pluggable model-update aggregation — the server side of every round.
+
+Until PR 9 the FedAvg reduction was hard-coded in four places
+(``base.tree_weighted_mean`` for the stepwise path, the jitted
+``engine.stacked_weighted_mean`` for the per-epoch compiled path, an
+inlined ``_weighted_mean`` in ``engine.make_fl_run``'s round scan, and a
+host-side secagg special case branched inside ``FedAvg._aggregate``).
+This module owns all of it behind one interface:
+
+  * ``Aggregator.aggregate(stacked, weights, prev, ...)`` is TRACEABLE —
+    it can live inside the whole-run round scan, so the multi-epoch run
+    stays ONE XLA dispatch whatever the aggregation rule.
+  * ``Aggregator.aggregate_trees`` / ``Aggregator.host`` are the
+    host-callable forms the stepwise and per-epoch compiled paths use.
+  * ``prev`` (the pre-round global params) makes zero-weight rounds well
+    defined: a round where no client carries weight — Poisson sampling
+    drawing nobody, or an all-phantom shard — keeps the previous globals
+    instead of dividing by zero into NaNs.
+  * ``scan_compatible=False`` (secagg: a host-side pairwise-mask
+    protocol) tells the strategy to keep the per-round host loop.
+
+Registered rules: ``weighted_mean`` (data-size FedAvg — bit-identical to
+the pre-PR-9 code when weights are positive), ``secagg``, robust
+``trimmed_mean`` / ``coordinate_median``, async ``staleness_discounted``
+(stale updates re-weighted by rounds-behind), and two-tier
+``hierarchical`` (region means, then an unweighted mean over regions).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# functional cores (moved verbatim from base.py / engine.py)
+# ---------------------------------------------------------------------------
+
+def tree_mean(trees):
+    """Plain mean over a list of pytrees (host-side, eager)."""
+    return jax.tree.map(lambda *xs: sum(xs) / len(xs), *trees)
+
+
+def tree_weighted_mean(trees, weights, prev=None):
+    """Data-size-weighted mean over a list of pytrees (host-side, eager).
+
+    ``prev`` guards the all-zero-weight case: with no weight anywhere the
+    round is a no-op and the previous params come back unchanged (without
+    ``prev`` the guard falls back to the unweighted mean) — the pre-PR-9
+    code divided by the zero sum and produced NaN params.
+    """
+    total = sum(weights)
+    if total <= 0:
+        return prev if prev is not None else tree_mean(trees)
+    return jax.tree.map(
+        lambda *xs: sum(w * x for w, x in zip(weights, xs)) / total, *trees)
+
+
+def weighted_mean_normalized(stacked, w):
+    """Normalized-weight mean over the leading hospital axis (traceable —
+    shared by the jitted host-callable below and the in-scan FedAvg of
+    ``engine.make_fl_run``)."""
+    def leaf(x):
+        wx = w.reshape((-1,) + (1,) * (x.ndim - 1))
+        return (x.astype(jnp.float32) * wx).sum(axis=0).astype(x.dtype)
+
+    return jax.tree.map(leaf, stacked)
+
+
+def weighted_mean_guarded(stacked, weights, prev):
+    """Traceable weighted mean with the zero-total guard: normalizes raw
+    ``weights`` in-graph and selects ``prev`` wherever the round carries
+    no weight at all (a no-client Poisson round, an all-phantom shard)."""
+    wf = weights.astype(jnp.float32)
+    total = wf.sum()
+    w = wf / jnp.where(total > 0, total, 1.0)
+    out = weighted_mean_normalized(stacked, w)
+    return jax.tree.map(
+        lambda a, p: jnp.where(total > 0, a, p.astype(a.dtype)), out, prev)
+
+
+def mean_sync(stacked, w=None):
+    """SFLv2-style client sync (traceable): every hospital gets the mean
+    of all client segments.  ``w`` (normalized-to-sum weights, e.g. a
+    placement's phantom mask) makes it a weighted mean so padding rows
+    contribute nothing — phantom rows also RECEIVE the mean, which is
+    harmless (they are never read and never weigh into future syncs)."""
+    if w is None:
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x.mean(axis=0, keepdims=True),
+                                       x.shape), stacked)
+    wn = w.astype(jnp.float32) / w.astype(jnp.float32).sum()
+
+    def leaf(x):
+        wx = wn.reshape((-1,) + (1,) * (x.ndim - 1))
+        m = (x.astype(jnp.float32) * wx).sum(axis=0,
+                                             keepdims=True).astype(x.dtype)
+        return jnp.broadcast_to(m, x.shape)
+
+    return jax.tree.map(leaf, stacked)
+
+
+@jax.jit
+def _stacked_weighted_mean_jit(stacked, weights):
+    w = weights.astype(jnp.float32) / weights.astype(jnp.float32).sum()
+    return weighted_mean_normalized(stacked, w)
+
+
+def stacked_weighted_mean(stacked, weights, prev=None):
+    """Data-size-weighted FedAvg over the leading hospital axis — ONE
+    fused program instead of per-leaf eager host ops over a list of
+    trees (host-side aggregation cost grows with n_clients x n_leaves
+    and was dwarfing the compiled epoch itself).  Zero-weight rows
+    (placement phantoms) contribute nothing.  An all-zero weight vector
+    returns ``prev`` (the zero-weight-round guard; unweighted mean when
+    no ``prev`` is given) — checked host-side so the positive-weight
+    program is byte-identical to the unguarded pre-PR-9 jit."""
+    if float(np.sum(np.asarray(weights, np.float64))) <= 0:
+        return prev if prev is not None else _mean_sync_collapse(stacked)
+    return _stacked_weighted_mean_jit(stacked, jnp.asarray(weights))
+
+
+@jax.jit
+def _mean_sync_jit(stacked):
+    return mean_sync(stacked)
+
+
+@jax.jit
+def _mean_sync_w_jit(stacked, w):
+    return mean_sync(stacked, w)
+
+
+@jax.jit
+def _mean_sync_collapse(stacked):
+    return jax.tree.map(lambda x: x.mean(axis=0), stacked)
+
+
+def stacked_mean_sync(stacked, weights=None):
+    """SFLv2-style client synchronization on the stacked hospital axis:
+    every hospital gets the (optionally weighted — phantom rows excluded)
+    mean of all client segments."""
+    if weights is None:
+        return _mean_sync_jit(stacked)
+    return _mean_sync_w_jit(stacked, jnp.asarray(weights, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# the Aggregator interface
+# ---------------------------------------------------------------------------
+
+class Aggregator:
+    """One server-side aggregation rule.
+
+    ``aggregate`` is the traceable core — ``stacked`` is a pytree with a
+    leading hospital (or participation-slot) axis, ``weights`` the raw
+    (unnormalized) per-row weights with zeros for phantom / empty rows,
+    ``prev`` the pre-round globals returned verbatim when nothing
+    carries weight.  ``staleness`` ([rows] rounds-behind, participation
+    runs) and ``gids`` ([rows] global hospital ids, -1 for empty slots)
+    are optional per-round context individual rules may use.
+    """
+    name = "base"
+    scan_compatible = True
+
+    def aggregate(self, stacked, weights, prev, staleness=None, gids=None):
+        raise NotImplementedError
+
+    # -- host-callable forms -------------------------------------------------
+    def aggregate_trees(self, trees, weights, prev=None):
+        """List-of-pytrees form for the stepwise host loop."""
+        from repro.core.partition import stack_trees
+        if prev is None:
+            prev = trees[0]
+        return self.host(stack_trees(trees), np.asarray(weights), prev)
+
+    def host(self, stacked, weights, prev=None):
+        """Stacked form for the per-epoch compiled path (jitted once)."""
+        if prev is None:
+            prev = jax.tree.map(lambda x: x[0], stacked)
+        if not hasattr(self, "_host_jit"):
+            self._host_jit = jax.jit(
+                lambda s, w, p: self.aggregate(s, w, p))
+        return self._host_jit(stacked, jnp.asarray(weights, jnp.float32),
+                              prev)
+
+
+class WeightedMean(Aggregator):
+    """Data-size-weighted FedAvg — the paper's aggregation and the
+    default.  Bit-identical to the pre-PR-9 hard-coded paths whenever
+    any weight is positive (the zero-weight guard only reroutes rounds
+    that previously produced NaNs)."""
+    name = "weighted_mean"
+
+    def aggregate(self, stacked, weights, prev, staleness=None, gids=None):
+        return weighted_mean_guarded(stacked, weights, prev)
+
+    def aggregate_trees(self, trees, weights, prev=None):
+        return tree_weighted_mean(trees, weights, prev)
+
+    def host(self, stacked, weights, prev=None):
+        return stacked_weighted_mean(stacked, weights, prev)
+
+
+class SecAggregator(Aggregator):
+    """Pairwise-mask secure aggregation (host-side protocol).
+
+    Wraps a ``repro.privacy.secagg.SecAgg`` group: per-client fixed-point
+    masked uploads, modular server sum.  The mask exchange is a host
+    round-trip, so it cannot fold into the round scan —
+    ``scan_compatible=False`` keeps the owning strategy on its per-round
+    path."""
+    name = "secagg"
+    scan_compatible = False
+
+    def __init__(self, secagg):
+        self.secagg = secagg
+
+    def aggregate(self, stacked, weights, prev, staleness=None, gids=None):
+        raise RuntimeError("secagg is a host-side protocol; use "
+                           "aggregate_trees / host")
+
+    def aggregate_trees(self, trees, weights, prev=None):
+        if float(np.sum(np.asarray(weights, np.float64))) <= 0:
+            return prev if prev is not None else tree_mean(trees)
+        host = [jax.tree.map(np.asarray, t) for t in trees]
+        agg = self.secagg.aggregate_weighted(host, list(weights))
+        return jax.tree.map(lambda a, old: jnp.asarray(a, old.dtype), agg,
+                            trees[0])
+
+    def host(self, stacked, weights, prev=None):
+        from repro.core.partition import unstack_tree
+        n = self.secagg.n_clients
+        trees = unstack_tree(stacked, n)
+        # float64 weights: the fixed-point quantization of w / sum(w) must
+        # match the stepwise path's Python-float division exactly
+        w = [float(x) for x in np.asarray(weights, np.float64)[:n]]
+        return self.aggregate_trees(trees, w, prev)
+
+
+class TrimmedMean(Aggregator):
+    """Coordinate-wise trimmed mean over rows with positive weight
+    (Byzantine-robust; Yin et al. 2018).  Weights gate VALIDITY only —
+    the surviving coordinates average unweighted, as the robustness
+    guarantee requires.  Trims ``floor(trim * n_valid)`` from each end,
+    capped so at least one row always survives."""
+    name = "trimmed_mean"
+
+    def __init__(self, trim: float = 0.1):
+        if not 0.0 <= trim < 0.5:
+            raise ValueError("trim must be in [0, 0.5)")
+        self.trim = float(trim)
+
+    def aggregate(self, stacked, weights, prev, staleness=None, gids=None):
+        wf = weights.astype(jnp.float32)
+        valid = wf > 0
+        n_valid = valid.sum().astype(jnp.int32)
+        k = jnp.minimum(jnp.floor(self.trim * n_valid).astype(jnp.int32),
+                        jnp.maximum((n_valid - 1) // 2, 0))
+
+        def leaf(x, p):
+            C = x.shape[0]
+            vshape = (C,) + (1,) * (x.ndim - 1)
+            xs = jnp.where(valid.reshape(vshape), x.astype(jnp.float32),
+                           jnp.inf)
+            xs = jnp.sort(xs, axis=0)            # invalid rows sort last
+            ranks = jnp.arange(C).reshape(vshape)
+            keep = (ranks >= k) & (ranks < n_valid - k)
+            denom = jnp.maximum(n_valid - 2 * k, 1).astype(jnp.float32)
+            total = jnp.where(keep, xs, 0.0).sum(axis=0)
+            return jnp.where(n_valid > 0, (total / denom).astype(x.dtype),
+                             p.astype(x.dtype))
+
+        return jax.tree.map(leaf, stacked, prev)
+
+
+class CoordinateMedian(Aggregator):
+    """Coordinate-wise median over rows with positive weight (robust;
+    even counts average the two middle order statistics)."""
+    name = "coordinate_median"
+
+    def aggregate(self, stacked, weights, prev, staleness=None, gids=None):
+        wf = weights.astype(jnp.float32)
+        valid = wf > 0
+        n_valid = valid.sum().astype(jnp.int32)
+        lo = jnp.maximum((n_valid - 1) // 2, 0)
+        hi = n_valid // 2
+
+        def leaf(x, p):
+            C = x.shape[0]
+            vshape = (C,) + (1,) * (x.ndim - 1)
+            xs = jnp.where(valid.reshape(vshape), x.astype(jnp.float32),
+                           jnp.inf)
+            xs = jnp.sort(xs, axis=0)
+            med = (jnp.take(xs, lo, axis=0) + jnp.take(xs, hi, axis=0)) / 2
+            return jnp.where(n_valid > 0, med.astype(x.dtype),
+                             p.astype(x.dtype))
+
+        return jax.tree.map(leaf, stacked, prev)
+
+
+class StalenessDiscounted(Aggregator):
+    """Async/buffered FedAvg: each update's data-size weight is further
+    discounted by ``decay ** staleness`` — ``staleness`` counts the
+    rounds a hospital sat out since it last contributed (0 for fresh or
+    first-time updates), so rarely-sampled hospitals re-entering a
+    participation run pull the globals less hard."""
+    name = "staleness_discounted"
+
+    def __init__(self, decay: float = 0.5):
+        if not 0.0 < decay <= 1.0:
+            raise ValueError("decay must be in (0, 1]")
+        self.decay = float(decay)
+
+    def aggregate(self, stacked, weights, prev, staleness=None, gids=None):
+        w = weights.astype(jnp.float32)
+        if staleness is not None:
+            w = w * jnp.power(jnp.float32(self.decay),
+                              staleness.astype(jnp.float32))
+        return weighted_mean_guarded(stacked, w, prev)
+
+
+class Hierarchical(Aggregator):
+    """Two-tier region -> global aggregation: data-size-weighted mean
+    WITHIN each region, then an UNWEIGHTED mean over non-empty regions —
+    every region gets one vote regardless of cohort size (per-region
+    fairness; a weight-proportional second tier would collapse to the
+    flat weighted mean).  ``regions[g]`` maps global hospital ``g`` to
+    its region; participation runs resolve slot rows through ``gids``.
+    """
+    name = "hierarchical"
+
+    def __init__(self, regions):
+        self.regions = tuple(int(r) for r in regions)
+        if any(r < 0 for r in self.regions):
+            raise ValueError("region ids must be >= 0")
+        self.n_regions = max(self.regions) + 1 if self.regions else 0
+
+    def aggregate(self, stacked, weights, prev, staleness=None, gids=None):
+        reg = jnp.asarray(self.regions, jnp.int32)
+        C = weights.shape[0]
+        r = reg[:C] if gids is None else reg[jnp.maximum(gids, 0)]
+        wf = weights.astype(jnp.float32)
+        R = self.n_regions
+        reg_w = jax.ops.segment_sum(wf, r, num_segments=R)        # [R]
+        nonempty = (reg_w > 0).astype(jnp.float32)
+        n_r = nonempty.sum()
+
+        def leaf(x, p):
+            flat = x.reshape(C, -1).astype(jnp.float32)
+            s = jax.ops.segment_sum(flat * wf[:, None], r, num_segments=R)
+            means = s / jnp.maximum(reg_w, 1e-12)[:, None]
+            g = ((means * nonempty[:, None]).sum(axis=0)
+                 / jnp.maximum(n_r, 1.0))
+            return jnp.where(n_r > 0, g.reshape(x.shape[1:]).astype(x.dtype),
+                             p.astype(x.dtype))
+
+        return jax.tree.map(leaf, stacked, prev)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+AGGREGATORS: dict = {
+    "weighted_mean": WeightedMean,
+    "trimmed_mean": TrimmedMean,
+    "coordinate_median": CoordinateMedian,
+    "staleness_discounted": StalenessDiscounted,
+    "hierarchical": Hierarchical,
+}
+
+
+def register(name: str, cls) -> None:
+    """Add an ``Aggregator`` subclass to the registry."""
+    AGGREGATORS[name] = cls
+
+
+def make_aggregator(spec=None) -> Aggregator:
+    """``None`` -> the default ``WeightedMean``; a registered name ->
+    that rule with default parameters; an ``Aggregator`` instance passes
+    through (the way to set ``trim`` / ``decay`` / ``regions``)."""
+    if spec is None:
+        return WeightedMean()
+    if isinstance(spec, Aggregator):
+        return spec
+    if isinstance(spec, str):
+        if spec not in AGGREGATORS:
+            raise ValueError(f"unknown aggregator {spec!r}; "
+                             f"registered: {sorted(AGGREGATORS)}")
+        return AGGREGATORS[spec]()
+    raise TypeError(f"aggregator spec must be None, a name, or an "
+                    f"Aggregator, got {type(spec).__name__}")
+
+
+__all__ = ["Aggregator", "WeightedMean", "SecAggregator", "TrimmedMean",
+           "CoordinateMedian", "StalenessDiscounted", "Hierarchical",
+           "AGGREGATORS", "register", "make_aggregator", "tree_mean",
+           "tree_weighted_mean", "weighted_mean_normalized",
+           "weighted_mean_guarded", "mean_sync", "stacked_weighted_mean",
+           "stacked_mean_sync"]

@@ -32,7 +32,6 @@ from __future__ import annotations
 import dataclasses
 
 import jax
-import numpy as np
 
 from repro.core.partition import SplitAdapter, leaf_bytes
 

@@ -10,7 +10,7 @@ from repro.core.strategies.splitfed import SplitFedV1, SplitFedV2, SplitFedV3
 def make_strategy(method: str, adapter, opt_factory, n_clients,
                   transport=None, privacy=None, engine="compiled",
                   drop_remainder=True, shard=False, observe=None,
-                  precision="fp32"):
+                  precision="fp32", participation=None, aggregator=None):
     """method: centralized | fl | sl_{ac,am} | sflv{1,2,3}_{ac,am}.
 
     ``transport`` (repro.wire.Transport) compresses the cut-layer link of
@@ -49,11 +49,35 @@ def make_strategy(method: str, adapter, opt_factory, n_clients,
     Evaluation always runs full precision.  bf16 is parity-gated against
     fp32 in tests/test_precision.py (AUROC tolerance, not bitwise — see
     DESIGN.md §13).
+
+    ``participation`` (repro.core.participation.Participation) samples K
+    of the N enrolled hospitals each round (fixed-size, Poisson, or an
+    explicit schedule) — the compiled whole-run program packs each
+    round's cohort into a fixed slot axis (compute scales with K, not N)
+    and the RDP accountant composes at the amplified rate.  Compiled
+    engine only; ``shard`` and secure aggregation are unsupported with
+    it, centralized has no cohort to sample, and the split family
+    supports fixed-size cohorts without ``observe``.
+    ``Participation(n_global=N, k=N)`` is bit-identical to
+    ``participation=None``.
+
+    ``aggregator`` (FL only) replaces the data-size-weighted FedAvg mean
+    with a registered ``repro.core.aggregate`` rule — a name
+    (``"trimmed_mean"``, ``"coordinate_median"``,
+    ``"staleness_discounted"``, ``"hierarchical"``...) or an
+    ``Aggregator`` instance; ``None`` keeps the (bit-identical) default.
     """
     from repro.core.partition import cast_adapter
     adapter = cast_adapter(adapter, precision)
+    if participation is not None and method == "centralized":
+        raise ValueError("centralized pools all hospitals; there is no "
+                         "per-round cohort to sample")
+    if aggregator is not None and method != "fl":
+        raise ValueError("aggregator= selects the FedAvg aggregation rule "
+                         f"and applies to fl only, not {method}")
     kw = dict(privacy=privacy, engine=engine,
-              drop_remainder=drop_remainder, shard=shard, observe=observe)
+              drop_remainder=drop_remainder, shard=shard, observe=observe,
+              participation=participation)
     if method in ("centralized", "fl"):
         if transport is not None:
             raise ValueError(f"{method} has no cut-layer link for a "
@@ -62,8 +86,11 @@ def make_strategy(method: str, adapter, opt_factory, n_clients,
             raise ValueError(f"{method} has no cut layer to noise")
         if privacy is not None and privacy.secagg and method != "fl":
             raise ValueError("secure aggregation needs federated uploads")
-        return (Centralized if method == "centralized" else FedAvg)(
-            adapter, opt_factory, n_clients, **kw)
+        if method == "centralized":
+            kw.pop("participation")
+            return Centralized(adapter, opt_factory, n_clients, **kw)
+        return FedAvg(adapter, opt_factory, n_clients,
+                      aggregator=aggregator, **kw)
     if privacy is not None and privacy.secagg:
         raise ValueError("secure aggregation applies to FL model uploads; "
                          f"{method} ships activations, not updates")

@@ -67,14 +67,9 @@ class EpochLog:
         return float((l * w).sum() / max(w.sum(), 1.0))
 
 
-def tree_mean(trees):
-    return jax.tree.map(lambda *xs: sum(xs) / len(xs), *trees)
-
-
-def tree_weighted_mean(trees, weights):
-    total = sum(weights)
-    return jax.tree.map(
-        lambda *xs: sum(w * x for w, x in zip(weights, xs)) / total, *trees)
+# aggregation cores live in repro.core.aggregate (PR 9); re-exported here
+# because the strategy layer and external callers import them from base
+from repro.core.aggregate import tree_mean, tree_weighted_mean  # noqa: E402
 
 
 def np_batches(data: dict, batch_size: int, rng: np.random.Generator | None,
@@ -107,7 +102,7 @@ class Strategy:
     def __init__(self, adapter: SplitAdapter, opt_factory: Callable[[], O.Optimizer],
                  n_clients: int, privacy=None, engine: str = "compiled",
                  drop_remainder: bool = True, shard: bool = False,
-                 observe=None):
+                 observe=None, participation=None, aggregator=None):
         if engine not in ("stepwise", "compiled"):
             raise ValueError(f"unknown engine {engine!r}")
         self.adapter = adapter
@@ -117,6 +112,23 @@ class Strategy:
         self.engine = engine
         self.drop_remainder = drop_remainder
         self.shard = shard              # place hospital axis across devices
+        from repro.core.participation import as_participation
+        self.participation = as_participation(participation)
+        if self.participation is not None:
+            if self.participation.n_global != n_clients:
+                raise ValueError(
+                    f"participation.n_global={self.participation.n_global} "
+                    f"!= n_clients={n_clients}")
+            if engine != "compiled":
+                raise ValueError(
+                    "participation= requires the compiled engine (the "
+                    "stepwise oracle has no slot-packed hospital axis)")
+            if shard:
+                raise ValueError("participation= with shard= is not "
+                                 "supported (slot axis vs mesh padding)")
+        # aggregator spec (repro.core.aggregate); resolved by FedAvg —
+        # make_strategy rejects it for every other method
+        self.aggregator_spec = aggregator
         from repro.core.placement import Placement
         # pad-to-mesh hospital-axis placement (no-op mesh on one device;
         # the stepwise parity oracle never pads or shards)
@@ -193,6 +205,11 @@ class Strategy:
                         state, logs = out
                         return state, self._finish_run(client_data,
                                                        batch_size, logs)
+                    if self.participation is not None:
+                        # the per-epoch fallback has no slot packing; a
+                        # degenerate participating run trains nothing
+                        return state, self._finish_run(client_data,
+                                                       batch_size, [])
                 logs = []
                 for i in range(n_epochs):
                     with self._span(f"round {i}"):
@@ -223,8 +240,18 @@ class Strategy:
             rounds.append(r)
         if tel.epsilon and self._dp:
             ns = [len(d["label"]) for d in client_data]
+            kw = {}
+            part = self.participation
+            if part is not None and part.kind != "schedule":
+                # amplification: every hospital composes every round at
+                # the amplified rate over its would-be step count (the
+                # realized zeros of unsampled rounds don't apply here);
+                # deterministic schedules keep the realized client_steps
+                kw = dict(q_scale=part.rate,
+                          steps_override=getattr(self, "_last_part_nbs",
+                                                 None))
             eps = T.epsilon_rounds(self.privacy, logs, ns, batch_size,
-                                   pooled=self._eps_pooled)
+                                   pooled=self._eps_pooled, **kw)
             if eps is not None:
                 for r, e in zip(rounds, eps):
                     r.epsilon = e
@@ -300,9 +327,17 @@ class Strategy:
         self._key_step += count
         return np.arange(start + 1, start + count + 1, dtype=np.uint32)
 
-    def _dp_account(self, client_idx, n_samples, batch_size, count=1):
+    def _dp_account(self, client_idx, n_samples, batch_size, count=1,
+                    q_scale=1.0):
         """Record ``count`` DP mechanism applications on hospital
-        ``client_idx``'s data (sampling rate batch_size / n_samples)."""
+        ``client_idx``'s data (sampling rate batch_size / n_samples).
+
+        ``q_scale`` composes per-round client subsampling with the batch
+        rate: under ``Participation`` a hospital only contributes a round
+        with probability K/N (or q), so each round's mechanisms apply to
+        any one example with probability ``q_round * q_batch`` — the
+        amplified rate the subsampled-Gaussian RDP bound composes at.
+        """
         if not self._dp:
             return
         if self._accountants is None:
@@ -311,7 +346,7 @@ class Strategy:
                 RDPAccountant(self.privacy.noise_multiplier,
                               self.privacy.delta)
                 for _ in range(self.n_clients)]
-        q = min(batch_size / max(n_samples, 1), 1.0)
+        q = min(batch_size / max(n_samples, 1), 1.0) * q_scale
         self._accountants[client_idx].step(q, count)
 
     def privacy_report(self) -> list:
@@ -781,10 +816,13 @@ def sflv3_step_fn(adapter: SplitAdapter, opt_client: O.Optimizer,
 
         if telemetry is not None:
             def dp_step_obs(stacked_clients, server_params, c_opt, s_opt,
-                            stacked_batch, key=None):
+                            stacked_batch, key=None, gids=None):
                 off, w_local = _local_rows()
-                keys = jax.vmap(lambda c: jax.random.fold_in(key, c))(
-                    (off + jnp.arange(n_clients)).astype(jnp.uint32))
+                # under participation each slot keys by its GLOBAL hospital
+                # id, so a hospital's DP draws are co-sample independent
+                rows = (gids.astype(jnp.uint32) if gids is not None
+                        else (off + jnp.arange(n_clients)).astype(jnp.uint32))
+                keys = jax.vmap(lambda c: jax.random.fold_in(key, c))(rows)
 
                 def loss_fn(both, b, k):
                     params = {"front": both["c"]["front"],
@@ -847,10 +885,11 @@ def sflv3_step_fn(adapter: SplitAdapter, opt_client: O.Optimizer,
             return dp_step_obs, True
 
         def dp_step(stacked_clients, server_params, c_opt, s_opt,
-                    stacked_batch, key=None):
+                    stacked_batch, key=None, gids=None):
             off, w_local = _local_rows()
-            keys = jax.vmap(lambda c: jax.random.fold_in(key, c))(
-                (off + jnp.arange(n_clients)).astype(jnp.uint32))
+            rows = (gids.astype(jnp.uint32) if gids is not None
+                    else (off + jnp.arange(n_clients)).astype(jnp.uint32))
+            keys = jax.vmap(lambda c: jax.random.fold_in(key, c))(rows)
 
             def loss_fn(both, b, k):
                 params = {"front": both["c"]["front"], "middle": both["s"]}
@@ -880,7 +919,8 @@ def sflv3_step_fn(adapter: SplitAdapter, opt_client: O.Optimizer,
 
     if telemetry is not None:
         def step_obs(stacked_clients, server_params, c_opt, s_opt,
-                     stacked_batch, key=None):
+                     stacked_batch, key=None, gids=None):
+            del gids  # keyless step: slot identity only affects PRNG rows
             _, w_local = _local_rows()
 
             def client_loss(cp, sp, batch):
@@ -924,7 +964,8 @@ def sflv3_step_fn(adapter: SplitAdapter, opt_client: O.Optimizer,
         return step_obs, False
 
     def step(stacked_clients, server_params, c_opt, s_opt, stacked_batch,
-             key=None):
+             key=None, gids=None):
+        del gids  # keyless step: slot identity only affects PRNG rows
         _, w_local = _local_rows()
 
         def client_loss(cp, sp, batch):

@@ -60,6 +60,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.aggregate import (mean_sync as _mean_sync,
+                                  stacked_mean_sync, stacked_weighted_mean,
+                                  weighted_mean_normalized as _weighted_mean)
 from repro.core.partition import (SplitAdapter, tree_put, tree_select,
                                   tree_take)
 from repro.core.strategies.base import (full_step_fn, sflv3_step_fn,
@@ -414,38 +417,6 @@ def make_sflv3_epoch(adapter: SplitAdapter, opt_client: O.Optimizer,
                                      client_weights, placement, telemetry))
 
 
-def _weighted_mean(stacked, w):
-    """Normalized-weight mean over the leading hospital axis (traceable —
-    shared by the jitted host-callable below and the in-scan FedAvg of
-    ``make_fl_run``)."""
-    def leaf(x):
-        wx = w.reshape((-1,) + (1,) * (x.ndim - 1))
-        return (x.astype(jnp.float32) * wx).sum(axis=0).astype(x.dtype)
-
-    return jax.tree.map(leaf, stacked)
-
-
-def _mean_sync(stacked, w=None):
-    """SFLv2-style client sync (traceable): every hospital gets the mean
-    of all client segments.  ``w`` (normalized-to-sum weights, e.g. a
-    placement's phantom mask) makes it a weighted mean so padding rows
-    contribute nothing — phantom rows also RECEIVE the mean, which is
-    harmless (they are never read and never weigh into future syncs)."""
-    if w is None:
-        return jax.tree.map(
-            lambda x: jnp.broadcast_to(x.mean(axis=0, keepdims=True),
-                                       x.shape), stacked)
-    wn = w.astype(jnp.float32) / w.astype(jnp.float32).sum()
-
-    def leaf(x):
-        wx = wn.reshape((-1,) + (1,) * (x.ndim - 1))
-        m = (x.astype(jnp.float32) * wx).sum(axis=0,
-                                             keepdims=True).astype(x.dtype)
-        return jnp.broadcast_to(m, x.shape)
-
-    return jax.tree.map(leaf, stacked)
-
-
 def _update_cosine(stacked, gp, new_gp, eps=1e-12):
     """Per-hospital cosine between each local FedAvg update delta
     (``local_c - global``) and the aggregated mean delta
@@ -474,34 +445,10 @@ def update_cosine(stacked, gp, new_gp):
     return _update_cosine(stacked, gp, new_gp)
 
 
-@jax.jit
-def stacked_weighted_mean(stacked, weights):
-    """Data-size-weighted FedAvg over the leading hospital axis — ONE
-    fused program instead of per-leaf eager host ops over a list of
-    trees (host-side aggregation cost grows with n_clients x n_leaves
-    and was dwarfing the compiled epoch itself).  Zero-weight rows
-    (placement phantoms) contribute nothing."""
-    w = weights.astype(jnp.float32) / weights.astype(jnp.float32).sum()
-    return _weighted_mean(stacked, w)
-
-
-@jax.jit
-def _mean_sync_jit(stacked):
-    return _mean_sync(stacked)
-
-
-@jax.jit
-def _mean_sync_w_jit(stacked, w):
-    return _mean_sync(stacked, w)
-
-
-def stacked_mean_sync(stacked, weights=None):
-    """SFLv2-style client synchronization on the stacked hospital axis:
-    every hospital gets the (optionally weighted — phantom rows excluded)
-    mean of all client segments."""
-    if weights is None:
-        return _mean_sync_jit(stacked)
-    return _mean_sync_w_jit(stacked, jnp.asarray(weights, jnp.float32))
+# ``stacked_weighted_mean`` / ``stacked_mean_sync`` (and the traceable
+# ``_weighted_mean`` / ``_mean_sync`` cores the run builders inline) now
+# live in ``repro.core.aggregate`` — imported above, re-exported here for
+# the strategies' compiled paths and external callers.
 
 
 # ---------------------------------------------------------------------------
@@ -585,7 +532,7 @@ def pack_run(client_data, batch_size: int, rng, n_epochs: int,
 
 
 def make_fl_run(adapter: SplitAdapter, opt: O.Optimizer, privacy=None,
-                placement=None, telemetry=None):
+                placement=None, telemetry=None, aggregator=None):
     """Whole FL training run as ONE program: ``lax.scan`` over rounds, each
     round the SAME vmap-over-hospitals scan-over-batches body
     ``make_fl_epoch`` jits, followed by the in-graph data-size-weighted
@@ -603,27 +550,36 @@ def make_fl_run(adapter: SplitAdapter, opt: O.Optimizer, privacy=None,
     local delta and the aggregated mean delta (``[E, C]``), computed
     in-graph from the stacked locals the round already holds: the run
     stays ONE dispatch and the FedAvg math is untouched.
+
+    ``aggregator=None`` keeps the inlined pre-normalized weighted mean
+    (bit-identical to pre-PR-9 programs); a scan-compatible
+    ``core.aggregate.Aggregator`` replaces the round reduction in-graph.
     """
     epoch = _fl_epoch_body(adapter, opt, privacy, placement, telemetry)
     observed = telemetry is not None
     want_cos = observed and telemetry.update_cosine
 
     def run(global_params, batches, mask, ex_w, key_idx, base_key, agg_w):
-        w = agg_w.astype(jnp.float32) / agg_w.astype(jnp.float32).sum()
+        if aggregator is None:
+            w = agg_w.astype(jnp.float32) / agg_w.astype(jnp.float32).sum()
+            reduce = lambda stacked, gp: _weighted_mean(stacked, w)
+        else:
+            reduce = lambda stacked, gp: aggregator.aggregate(
+                stacked, agg_w, gp)
 
         def round_body(gp, xs):
             b_e, ki_e = xs
             if observed:
                 stacked, losses, met = epoch(gp, b_e, mask, ex_w, ki_e,
                                              base_key)
-                new_gp = _weighted_mean(stacked, w)
+                new_gp = reduce(stacked, gp)
                 if want_cos:
                     met = dict(met)
                     met["update_cosine"] = _update_cosine(stacked, gp,
                                                           new_gp)
                 return new_gp, (losses, met)
             stacked, losses = epoch(gp, b_e, mask, ex_w, ki_e, base_key)
-            return _weighted_mean(stacked, w), losses
+            return reduce(stacked, gp), losses
 
         return jax.lax.scan(round_body, global_params, (batches, key_idx))
 
@@ -731,6 +687,322 @@ def make_sflv3_run(adapter: SplitAdapter, opt_client: O.Optimizer,
             round_body, (stacked_clients, server, c_opt, s_opt),
             (batches, key_idx))
         return (*carry, *ys) if observed else (*carry, ys)
+
+    return _donating_jit(run, donate_argnums=(0, 1, 2, 3, 4))
+
+
+# ---------------------------------------------------------------------------
+# participation: per-round K-of-N subsampling into a fixed slot axis
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ParticipationPack:
+    """Per-round packing metadata for a participating run.
+
+    The hospital axis is ``n_slots`` wide (K for fixed-size sampling) and
+    every per-round array rides the round scan as an INPUT — who
+    participates is data, not shape, so the whole run stays one program
+    and compute scales with the slot count, not the federation size.
+    ``slot_gid[e, s]`` maps slot ``s`` of round ``e`` to its global
+    hospital id (-1 for an empty slot: zero weight, all-False mask);
+    ``staleness[e, s]`` counts the rounds that hospital sat out since it
+    last participated (0 for fresh/first-time rows);
+    ``n_batches`` / ``n_samples`` / ``step_examples`` are per GLOBAL
+    hospital (epoch-invariant).
+    """
+    mask: np.ndarray                    # [E, S, NB] bool
+    ex_weights: np.ndarray | None       # [E, S, NB, B] float32
+    agg_w: np.ndarray                   # [E, S] float32 (data sizes)
+    slot_gid: np.ndarray                # [E, S] int32, -1 = empty slot
+    part_mask: np.ndarray               # [E, N] bool
+    staleness: np.ndarray               # [E, S] float32
+    n_batches: list                     # per global hospital
+    n_samples: list                     # per global hospital
+    step_examples: list                 # per global hospital
+    batch_size: int
+
+    @property
+    def nb_max(self) -> int:
+        return self.mask.shape[2]
+
+    @property
+    def n_slots(self) -> int:
+        return self.mask.shape[1]
+
+    @property
+    def n_rounds(self) -> int:
+        return self.mask.shape[0]
+
+    @property
+    def n_global(self) -> int:
+        return self.part_mask.shape[1]
+
+
+def pack_participation_run(client_data, batch_size: int, rng,
+                           n_epochs: int, participation,
+                           drop_remainder: bool = True):
+    """Pack ``n_epochs`` participating rounds into
+    ``[n_epochs, n_slots, nb_max, batch, ...]`` batch stacks.
+
+    Every round consumes the shared data-shuffle ``rng`` for ALL N
+    hospitals in global order — exactly the draws ``pack_run`` makes —
+    and only then fills slots with the round's sampled hospitals.  A
+    hospital's batch composition therefore depends only on (round,
+    hospital), never on who else was sampled (co-sample independence),
+    and ``Participation(k=N)`` packs arrays bit-identical to
+    ``pack_run``'s.  ``nb_max`` is the max batch count over ALL N
+    hospitals, so the slot grid never reshapes across rounds.
+    """
+    N = len(client_data)
+    if participation.n_global != N:
+        raise ValueError(f"participation.n_global={participation.n_global} "
+                         f"but {N} hospitals were passed")
+    S = participation.n_slots
+    ns = [len(next(iter(d.values()))) for d in client_data]
+    counts = [_client_batch_count(n, batch_size, drop_remainder)
+              for n in ns]
+    nbs = [c[0] for c in counts]
+    step_examples = [[batch_size] * nb_full + ([rem] if nb > nb_full else [])
+                     for nb, nb_full, rem in counts]
+    NB = max(nbs, default=0)
+    proto = client_data[0]
+    batches = {k: np.zeros((n_epochs, S, NB, batch_size, *v.shape[1:]),
+                           v.dtype) for k, v in proto.items()}
+    mask = np.zeros((n_epochs, S, NB), bool)
+    ex_w = (None if drop_remainder
+            else np.zeros((n_epochs, S, NB, batch_size), np.float32))
+    agg_w = np.zeros((n_epochs, S), np.float32)
+    slot_gid = np.full((n_epochs, S), -1, np.int32)
+    part_mask = np.zeros((n_epochs, N), bool)
+    staleness = np.zeros((n_epochs, S), np.float32)
+    last_seen: dict = {}
+    for e in range(n_epochs):
+        ids = participation.round_ids(e)
+        if len(ids) > S:
+            raise ValueError(f"round {e} sampled {len(ids)} hospitals but "
+                             f"only {S} slots are packed")
+        part_mask[e, ids] = True
+        orders = []
+        for g in range(N):
+            idx = np.arange(ns[g])
+            if rng is not None:
+                rng.shuffle(idx)
+            orders.append(idx)
+        for s, g in enumerate(ids):
+            g = int(g)
+            slot_gid[e, s] = g
+            agg_w[e, s] = ns[g]
+            prev_e = last_seen.get(g)
+            staleness[e, s] = 0.0 if prev_e is None else float(e - prev_e - 1)
+            mask[e, s, :nbs[g]] = True
+            used = nbs[g] * batch_size if drop_remainder else ns[g]
+            for k, v in client_data[g].items():
+                row = np.zeros((NB * batch_size, *v.shape[1:]), v.dtype)
+                row[:used] = v[orders[g][:used]]
+                batches[k][e, s] = row.reshape(NB, batch_size,
+                                               *v.shape[1:])
+            if ex_w is not None:
+                for j, m in enumerate(step_examples[g]):
+                    ex_w[e, s, j, :m] = 1.0
+            last_seen[g] = e
+    return batches, ParticipationPack(mask, ex_w, agg_w, slot_gid,
+                                      part_mask, staleness, nbs, ns,
+                                      step_examples, batch_size)
+
+
+def make_fl_run_participation(adapter: SplitAdapter, opt: O.Optimizer,
+                              privacy=None, telemetry=None,
+                              aggregator=None):
+    """Whole participating FL run as ONE program.
+
+    Same vmap-over-slots scan-over-batches round body as ``make_fl_run``,
+    but every per-round array (batch grid, mask, per-example weights,
+    key-index grid, aggregation weights, staleness, slot->gid map) is a
+    round-scan INPUT: empty slots are all-False-mask zero-weight phantom
+    rows, and the aggregation runs in-graph through ``aggregator`` (whose
+    zero-total guard keeps the previous globals on a no-client Poisson
+    round).  Returns ``run(global_params, batches[E,S,NB,...], mask,
+    ex_w, key_idx[E,S,NB], base_key, agg_w[E,S], staleness[E,S],
+    slot_gid[E,S]) -> (params, [E,S,NB] losses)`` (plus a ``met`` dict
+    with a ``telemetry`` spec, as in ``make_fl_run``).
+    """
+    epoch = _fl_epoch_body(adapter, opt, privacy, None, telemetry)
+    observed = telemetry is not None
+    want_cos = observed and telemetry.update_cosine
+
+    def run(global_params, batches, mask, ex_w, key_idx, base_key, agg_w,
+            staleness, slot_gid):
+        def round_body(gp, xs):
+            b_e, m_e, w_e, ki_e, aw_e, st_e, gid_e = xs
+            if observed:
+                stacked, losses, met = epoch(gp, b_e, m_e, w_e, ki_e,
+                                             base_key)
+                new_gp = aggregator.aggregate(stacked, aw_e, gp, st_e,
+                                              gid_e)
+                if want_cos:
+                    met = dict(met)
+                    met["update_cosine"] = _update_cosine(stacked, gp,
+                                                          new_gp)
+                return new_gp, (losses, met)
+            stacked, losses = epoch(gp, b_e, m_e, w_e, ki_e, base_key)
+            return aggregator.aggregate(stacked, aw_e, gp, st_e,
+                                        gid_e), losses
+
+        return jax.lax.scan(
+            round_body, global_params,
+            (batches, mask, ex_w, key_idx, agg_w, staleness, slot_gid))
+
+    return _donating_jit(run, donate_argnums=(0, 1))
+
+
+def make_interleaved_run_participation(adapter: SplitAdapter,
+                                       opt_client: O.Optimizer,
+                                       opt_server: O.Optimizer,
+                                       n_global: int, transport=None,
+                                       privacy=None,
+                                       sync_clients: bool = False):
+    """Whole participating SL/SFLv2 run as ONE program.
+
+    All N client segments (and their optimizer slices) persist in the
+    ``[N, ...]`` carry; each round's dense schedule covers only the
+    sampled slots and rides the scan as ``sched[E, steps, 3]`` rows of
+    ``(slot, batch, valid)`` — each step gathers the slot's GLOBAL row
+    via ``slot_gid``, runs the exact split step, and scatters back;
+    invalid padding rows are ``tree_select`` no-ops.  ``sync_clients``
+    (SFLv2) broadcasts the sampled slots' post-round mean to every
+    global row — the single-global-client-segment semantics.  Returns
+    ``run(stacked_clients[N,...], server, stacked_c_opts, s_opt,
+    batches[E,S,NB,...], ex_w, sched, key_idx[E,steps], base_key,
+    slot_gid[E,S]) -> (..., [E, steps] losses)``.
+    """
+    step, keyed = split_step_fn(adapter, opt_client, opt_server, transport,
+                                privacy)
+
+    def run(stacked_clients, server, stacked_c_opts, s_opt, batches, ex_w,
+            sched, key_idx, base_key, slot_gid):
+        def round_body(carry, xs):
+            sc0, sp0, co0, so0 = carry
+            b_e, w_e, sched_e, ki_e, gid_e = xs
+
+            def body(c2, xs2):
+                sc, sp, co, so = c2
+                row, ki = xs2
+                slot, b, valid = row[0], row[1], row[2]
+                g = jnp.maximum(gid_e[slot], 0)
+                batch = jax.tree.map(lambda x: x[slot, b], b_e)
+                w = None if w_e is None else w_e[slot, b]
+                cp, cop = tree_take(sc, g), tree_take(co, g)
+                out = step(cp, sp, cop, so, batch,
+                           _step_key(base_key, ki, keyed), w)
+                v = valid > 0
+                cp2 = tree_select(v, out[0], cp)
+                sp2 = tree_select(v, out[1], sp)
+                cop2 = tree_select(v, out[2], cop)
+                so2 = tree_select(v, out[3], so)
+                loss = jnp.where(v, out[4], 0.0)
+                return (tree_put(sc, g, cp2), sp2,
+                        tree_put(co, g, cop2), so2), loss
+
+            (sc, sp, co, so), losses = jax.lax.scan(
+                body, (sc0, sp0, co0, so0), (sched_e, ki_e))
+            if sync_clients:
+                w_slots = (gid_e >= 0).astype(jnp.float32)
+                rows = jax.tree.map(lambda x: x[jnp.maximum(gid_e, 0)], sc)
+                wn = w_slots / jnp.maximum(w_slots.sum(), 1.0)
+
+                def leaf(x):
+                    wx = wn.reshape((-1,) + (1,) * (x.ndim - 1))
+                    return (x.astype(jnp.float32) * wx).sum(axis=0)
+
+                m = jax.tree.map(leaf, rows)
+                sc = jax.tree.map(
+                    lambda x, mm: jnp.broadcast_to(
+                        mm.astype(x.dtype)[None], x.shape), sc, m)
+            return (sc, sp, co, so), losses
+
+        carry, losses = jax.lax.scan(
+            round_body, (stacked_clients, server, stacked_c_opts, s_opt),
+            (batches, ex_w, sched, key_idx, slot_gid))
+        return (*carry, losses)
+
+    return _donating_jit(run, donate_argnums=(0, 1, 2, 3, 4))
+
+
+def make_sflv3_run_participation(adapter: SplitAdapter,
+                                 opt_client: O.Optimizer,
+                                 opt_server: O.Optimizer, k_slots: int,
+                                 n_global: int, transport=None,
+                                 privacy=None, sync_clients: bool = False):
+    """Whole participating SplitFedv3/v1 run as ONE program.
+
+    The round body gathers the sampled slots' client segments (and their
+    optimizer rows) out of the persistent ``[N, ...]`` stacks via
+    ``slot_gid``, runs the synchronous slot-wide step scan (per-step DP
+    keys fold in the GLOBAL hospital id through the step fn's ``gids``
+    hook, so draws are co-sample independent), and scatters the trained
+    rows back.  ``step_valid[E, steps]`` masks rounds whose sampled max
+    batch count is below the global grid height.  Fixed-K only (every
+    slot real), so the in-step server-gradient average is the plain mean
+    over slots.  The Adam step count of the stacked client optimizer
+    stays a single shared scalar (as in the non-participating engine) —
+    it advances with the rounds regardless of who was sampled.  Returns
+    ``run(stacked_clients[N,...], server, c_opt, s_opt,
+    batches[E,S,NB,...], b_idx[E,steps,S], key_idx[E,steps],
+    step_valid[E,steps], base_key, slot_gid[E,S])
+    -> (..., [E, steps, S] losses)``.
+    """
+    step, keyed = sflv3_step_fn(adapter, opt_client, opt_server, k_slots,
+                                transport, privacy)
+
+    def rowwise(tree):
+        """Leaves with a leading global-hospital axis (vs shared scalars
+        like the Adam count)."""
+        return jax.tree.map(
+            lambda x: np.ndim(x) > 0 and np.shape(x)[0] == n_global, tree)
+
+    def gather(tree, gid):
+        return jax.tree.map(
+            lambda x, r: x[gid] if r else x, tree, rowwise(tree))
+
+    def scatter(full, rows, gid):
+        return jax.tree.map(
+            lambda x, y, r: x.at[gid].set(y) if r else y,
+            full, rows, rowwise(full))
+
+    def run(stacked_clients, server, c_opt, s_opt, batches, b_idx, key_idx,
+            step_valid, base_key, slot_gid):
+        def round_body(carry, xs):
+            sc, sp, co, so = carry
+            b_e, bi_e, ki_e, sv_e, gid_e = xs
+            sck = gather(sc, gid_e)
+            cok = gather(co, gid_e)
+
+            def body(c2, xs2):
+                sck_, sp_, cok_, so_ = c2
+                bi, ki, sv = xs2
+                batch = jax.tree.map(
+                    lambda x: x[jnp.arange(k_slots), bi], b_e)
+                out = step(sck_, sp_, cok_, so_, batch,
+                           _step_key(base_key, ki, keyed), gid_e)
+                new = tree_select(sv > 0, out[:4],
+                                  (sck_, sp_, cok_, so_))
+                return new, jnp.where(sv > 0, out[4], 0.0)
+
+            (sck, sp, cok, so), losses = jax.lax.scan(
+                body, (sck, sp, cok, so), (bi_e, ki_e, sv_e))
+            sc = scatter(sc, sck, gid_e)
+            co = scatter(co, cok, gid_e)
+            if sync_clients:
+                m = jax.tree.map(lambda x: x.mean(axis=0), sck)
+                sc = jax.tree.map(
+                    lambda x, mm: jnp.broadcast_to(mm[None], x.shape),
+                    sc, m)
+            return (sc, sp, co, so), losses
+
+        carry, losses = jax.lax.scan(
+            round_body, (stacked_clients, server, c_opt, s_opt),
+            (batches, b_idx, key_idx, step_valid, slot_gid))
+        return (*carry, losses)
 
     return _donating_jit(run, donate_argnums=(0, 1, 2, 3, 4))
 

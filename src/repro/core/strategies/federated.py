@@ -23,18 +23,32 @@ host-side protocol and cannot be fused into the program.
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.partition import unstack_tree
+from repro.core import aggregate as AGG
 from repro.core.strategies.base import (Strategy, EpochLog, make_full_step,
-                                        np_batches, tree_weighted_mean)
+                                        np_batches)
 
 
 class FedAvg(Strategy):
     name = "fl"
     shared_eval_params = True
+
+    def __init__(self, *args, **kw):
+        super().__init__(*args, **kw)
+        self._secagg_on = (self.privacy is not None and self.privacy.secagg)
+        if self._secagg_on:
+            if self.aggregator_spec is not None:
+                raise ValueError("aggregator= cannot be combined with "
+                                 "privacy.secagg (secure aggregation IS "
+                                 "the aggregation rule)")
+            if self.participation is not None:
+                raise ValueError("participation= with privacy.secagg is "
+                                 "not supported (the pairwise-mask "
+                                 "protocol assumes a fixed cohort)")
+            self._agg = None                 # built in setup (needs SecAgg)
+        else:
+            self._agg = AGG.make_aggregator(self.aggregator_spec)
 
     def setup(self, key):
         params = self.adapter.init(key)
@@ -42,19 +56,14 @@ class FedAvg(Strategy):
             self._opt = self.opt_factory()
             self._step = make_full_step(self.adapter, self._opt,
                                         self.privacy)
-        if (self.privacy is not None and self.privacy.secagg
-                and not hasattr(self, "secagg")):
+        if self._secagg_on and not hasattr(self, "secagg"):
             from repro.privacy.secagg import SecAgg
             self.secagg = SecAgg(self.n_clients, seed=self.privacy.seed)
+            self._agg = AGG.SecAggregator(self.secagg)
         return {"params": params}
 
-    def _aggregate(self, locals_, weights):
-        if self.privacy is not None and self.privacy.secagg:
-            host = [jax.tree.map(np.asarray, t) for t in locals_]
-            agg = self.secagg.aggregate_weighted(host, weights)
-            return jax.tree.map(lambda a, old: jnp.asarray(a, old.dtype),
-                                agg, locals_[0])
-        return tree_weighted_mean(locals_, weights)
+    def _aggregate(self, locals_, weights, prev=None):
+        return self._agg.aggregate_trees(locals_, weights, prev)
 
     def _round_telemetry(self, tel, losses, metrics, mask, old_gp,
                          stacked_locals, new_gp):
@@ -104,7 +113,7 @@ class FedAvg(Strategy):
             weights.append(n)
             client_steps.append(steps)
         old_gp = state["params"]
-        state["params"] = self._aggregate(locals_, weights)
+        state["params"] = self._aggregate(locals_, weights, prev=old_gp)
         log = EpochLog(losses, len(losses), weights=loss_w,
                        client_steps=client_steps)
         if tel is not None:
@@ -151,15 +160,12 @@ class FedAvg(Strategy):
         self._count_dispatch()
         locals_stacked, losses = out[0], out[1]
         old_gp = state["params"]
-        if self.privacy is not None and self.privacy.secagg:
-            # secagg masks per-client host uploads: unstack (real hospitals
-            # only) and reuse the exact stepwise aggregation path
-            locals_ = unstack_tree(locals_stacked, self.n_clients)
-            state["params"] = self._aggregate(
-                locals_, packed.n_samples[:self.n_clients])
-        else:
-            state["params"] = ENG.stacked_weighted_mean(
-                locals_stacked, np.asarray(packed.n_samples, np.float32))
+        # the aggregator's host path: the default WeightedMean dispatches
+        # the exact pre-refactor jitted weighted mean; SecAggregator
+        # unstacks real hospitals and runs the masked-upload protocol
+        state["params"] = self._agg.host(
+            locals_stacked, np.asarray(packed.n_samples, np.float32),
+            prev=old_gp)
         flat, loss_w = ENG.client_major_log(losses, packed)
         for ci, nb in enumerate(packed.n_batches):
             if nb:
@@ -177,13 +183,26 @@ class FedAvg(Strategy):
     @property
     def _whole_run(self):
         # secagg aggregates host-side per-round (masked uploads) and keeps
-        # the per-epoch dispatch path
-        return not (self.privacy is not None and self.privacy.secagg)
+        # the per-epoch dispatch path; so does any non-scan-compatible
+        # custom aggregator
+        if self._secagg_on:
+            return False
+        return self._agg.scan_compatible
+
+    @property
+    def _run_aggregator(self):
+        """Aggregator passed into the whole-run builders: ``None`` for the
+        default weighted mean so the fused program traces byte-identical
+        to the pre-aggregator engine."""
+        return None if type(self._agg) is AGG.WeightedMean else self._agg
 
     def _run_compiled(self, state, client_data, rng, batch_size, n_epochs):
         from repro.core.strategies import engine as ENG
         if ENG.empty_run(client_data, batch_size, self.drop_remainder):
             return None                        # empty run: per-epoch path
+        if self.participation is not None:
+            return self._run_participation(state, client_data, rng,
+                                           batch_size, n_epochs)
         tel = self._tel
         place = self.placement
         with self._span("pack"):
@@ -192,14 +211,16 @@ class FedAvg(Strategy):
                                            pad_clients=place.n_pad)
         if tel is None:
             if not hasattr(self, "_run_c"):
-                self._run_c = ENG.make_fl_run(self.adapter, self._opt,
-                                              self.privacy, place)
+                self._run_c = ENG.make_fl_run(
+                    self.adapter, self._opt, self.privacy, place,
+                    aggregator=self._run_aggregator)
             run_fn = self._run_c
         else:
             run_fn = self._get_obs(
                 "_run_obs_c", tel,
                 lambda: ENG.make_fl_run(self.adapter, self._opt,
-                                        self.privacy, place, tel))
+                                        self.privacy, place, tel,
+                                        aggregator=self._run_aggregator))
         key_idx = np.stack([ENG.key_index_grid(self, packed)
                             for _ in range(n_epochs)])
         args = (state["params"], place.put(batches, axis=1),
@@ -234,6 +255,101 @@ class FedAvg(Strategy):
             if nb:
                 self._dp_account(ci, packed.n_samples[ci], batch_size,
                                  count=nb * n_epochs)
+        return state, logs
+
+    def _run_participation(self, state, client_data, rng, batch_size,
+                           n_epochs):
+        """Whole participating run: per-round K-of-N subsampling packed
+        into a fixed slot axis, still ONE dispatch.
+
+        The per-step key-index grid is laid out over the VIRTUAL full-N
+        run — round r, hospital g, local step t gets the index the
+        non-participating run would give it — so a hospital's DP/noise
+        draws depend only on (round, hospital) and ``Participation(k=N)``
+        reproduces ``participation=None`` exactly."""
+        from repro.core.strategies import engine as ENG
+        part = self.participation
+        tel = self._tel
+        with self._span("pack"):
+            batches, pack = ENG.pack_participation_run(
+                client_data, batch_size, rng, n_epochs, part,
+                self.drop_remainder)
+        nbs = pack.n_batches
+        T_N = int(sum(nbs))
+        prefix = np.concatenate([[0], np.cumsum(nbs)[:-1]]).astype(np.int64)
+        key_idx = np.zeros((n_epochs, pack.n_slots, pack.nb_max), np.uint32)
+        if self._keyed:
+            base0 = self._key_step
+            for e in range(n_epochs):
+                for s in range(pack.n_slots):
+                    g = int(pack.slot_gid[e, s])
+                    if g >= 0 and nbs[g]:
+                        key_idx[e, s, :nbs[g]] = (
+                            base0 + 1 + e * T_N + prefix[g]
+                            + np.arange(nbs[g], dtype=np.int64))
+            self._key_step += n_epochs * T_N
+        if tel is None:
+            if not hasattr(self, "_run_part_c"):
+                self._run_part_c = ENG.make_fl_run_participation(
+                    self.adapter, self._opt, self.privacy,
+                    aggregator=self._agg)
+            run_fn = self._run_part_c
+        else:
+            run_fn = self._get_obs(
+                "_run_part_obs_c", tel,
+                lambda: ENG.make_fl_run_participation(
+                    self.adapter, self._opt, self.privacy, tel,
+                    aggregator=self._agg))
+        args = (state["params"], batches, pack.mask, pack.ex_weights,
+                key_idx, self._privacy_base_key(), pack.agg_w,
+                pack.staleness, pack.slot_gid)
+        with self._span("dispatch"):
+            if tel is None:
+                state["params"], losses = run_fn(*args)
+            else:
+                state["params"], (losses, met) = run_fn(*args)
+        self._count_dispatch()
+        self._last_run_invocation = (run_fn, ENG.abstract_args(args))
+        self._run_calls = getattr(self, "_run_calls", 0) + 1
+        losses = np.asarray(losses)
+        logs = []
+        for e in range(n_epochs):
+            flat, loss_w = [], []
+            csteps = [0] * pack.n_global
+            for s in range(pack.n_slots):
+                g = int(pack.slot_gid[e, s])
+                if g < 0:
+                    continue
+                flat.extend(float(x) for x in losses[e, s, :nbs[g]])
+                loss_w.extend(pack.step_examples[g])
+                csteps[g] = nbs[g]
+            logs.append(EpochLog(flat, len(flat), weights=loss_w,
+                                 client_steps=csteps))
+        if tel is not None:
+            from repro.obs import telemetry as T
+            met = {k: np.asarray(v) for k, v in met.items()}
+            extra = ({"update_cosine": met.pop("update_cosine")}
+                     if "update_cosine" in met else None)
+            rounds = T.rounds_participation(tel, losses, met, pack, extra)
+            for log, r in zip(logs, rounds):
+                log.telemetry = r
+        # RDP accounting: with sampling randomness EVERY hospital composes
+        # EVERY round at the amplified rate (q_round * q_batch) over its
+        # would-be step count; a deterministic schedule composes only the
+        # realized rounds at the plain batch rate
+        if part.kind == "schedule":
+            for g in range(pack.n_global):
+                cnt = int(pack.part_mask[:, g].sum()) * nbs[g]
+                if cnt:
+                    self._dp_account(g, pack.n_samples[g], batch_size,
+                                     count=cnt)
+        else:
+            self._last_part_nbs = list(nbs)
+            for g in range(pack.n_global):
+                if nbs[g]:
+                    self._dp_account(g, pack.n_samples[g], batch_size,
+                                     count=nbs[g] * n_epochs,
+                                     q_scale=part.rate)
         return state, logs
 
     def params_for_eval(self, state, client_idx):

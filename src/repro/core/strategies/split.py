@@ -32,6 +32,15 @@ class SplitLearning(Strategy):
         self.schedule = schedule
         self.transport = transport
         self.name = f"sl_{schedule}"
+        if self.participation is not None:
+            if self.participation.kind != "fixed":
+                raise ValueError(
+                    "the split family supports fixed-size participation "
+                    "only (Participation(k=...)): the shared-server "
+                    "schedule needs every slot filled")
+            if self.observe is not None:
+                raise ValueError("participation with observe is not "
+                                 "supported for the split family")
 
     def _client_tree(self, params):
         t = {"front": params["front"]}
@@ -194,6 +203,9 @@ class SplitLearning(Strategy):
         from repro.core.strategies import engine as ENG
         if ENG.empty_run(client_data, batch_size, self.drop_remainder):
             return None                        # empty run: per-epoch path
+        if self.participation is not None:
+            return self._run_participation(state, client_data, rng,
+                                           batch_size, n_epochs)
         tel = self._tel
         place = self.placement
         with self._span("pack"):
@@ -251,6 +263,104 @@ class SplitLearning(Strategy):
         self._account_compiled(packed, batch_size, n_epochs)
         return state, logs
 
+    def _run_participation(self, state, client_data, rng, batch_size,
+                           n_epochs):
+        """Whole participating SL/SFLv2 run: per round the full-N virtual
+        schedule is filtered to the K sampled hospitals (relative order
+        preserved) and padded to a fixed step count; per-step keys carry
+        the VIRTUAL full-N schedule position, so a hospital's noise draws
+        depend only on (round, hospital) and ``Participation(k=N)``
+        reproduces ``participation=None`` exactly."""
+        from repro.core.strategies import engine as ENG
+        if self._tel is not None:
+            raise ValueError("participation with observe is not supported "
+                             "for the split family")
+        part = self.participation
+        with self._span("pack"):
+            batches, pack = ENG.pack_participation_run(
+                client_data, batch_size, rng, n_epochs, part,
+                self.drop_remainder)
+        nbs = pack.n_batches
+        full_sched = schedule_array(self.schedule, nbs)
+        S_N = len(full_sched)
+        # per-round schedule rows (slot, batch, valid) + virtual key pos
+        rounds = []
+        for e in range(n_epochs):
+            gid = pack.slot_gid[e]
+            slot_of = {int(g): s for s, g in enumerate(gid) if g >= 0}
+            rounds.append([(slot_of[int(c)], int(b), p)
+                           for p, (c, b) in enumerate(full_sched)
+                           if int(c) in slot_of])
+        steps_max = max((len(r) for r in rounds), default=0)
+        if steps_max == 0:
+            return None
+        sched = np.zeros((n_epochs, steps_max, 3), np.int32)
+        key_idx = np.zeros((n_epochs, steps_max), np.uint32)
+        base0 = self._key_step
+        for e, rows in enumerate(rounds):
+            for t, (slot, b, p) in enumerate(rows):
+                sched[e, t] = (slot, b, 1)
+                if self._keyed:
+                    key_idx[e, t] = base0 + 1 + e * S_N + p
+        if self._keyed:
+            self._key_step += n_epochs * S_N
+        if not hasattr(self, "_run_part_c"):
+            self._run_part_c = ENG.make_interleaved_run_participation(
+                self.adapter, self._opt_c, self._opt_s, self.n_clients,
+                self.transport, self.privacy,
+                sync_clients=self._sync_stacked)
+        run_fn = self._run_part_c
+        self._ensure_stacked(state)
+        args = (state["stacked_clients"], state["server"],
+                state["stacked_c_opts"], state["s_opt"], batches,
+                pack.ex_weights, sched, key_idx,
+                self._privacy_base_key(), pack.slot_gid)
+        with self._span("dispatch"):
+            out = run_fn(*args)
+        self._count_dispatch()
+        self._last_run_invocation = (run_fn, ENG.abstract_args(args))
+        (state["stacked_clients"], state["server"],
+         state["stacked_c_opts"], state["s_opt"], losses) = out[:5]
+        self._run_calls = getattr(self, "_run_calls", 0) + 1
+        losses = np.asarray(losses)
+        logs = []
+        for e, rows in enumerate(rounds):
+            gid = pack.slot_gid[e]
+            flat = [float(x) for x in losses[e, :len(rows)]]
+            loss_w = [pack.step_examples[int(gid[slot])][b]
+                      for slot, b, _p in rows]
+            csteps = [0] * pack.n_global
+            for slot, _b, _p in rows:
+                csteps[int(gid[slot])] += 1
+            logs.append(EpochLog(flat, len(flat), weights=loss_w,
+                                 client_steps=csteps))
+        # amplified RDP: every hospital composes every round at rate K/N
+        # over the steps it runs when sampled
+        self._last_part_nbs = list(nbs)
+        for g in range(pack.n_global):
+            if nbs[g]:
+                self._dp_account(g, pack.n_samples[g], batch_size,
+                                 count=nbs[g] * n_epochs,
+                                 q_scale=part.rate)
+        # wire: only sampled clients' transfers exist, per round
+        if self.transport is not None:
+            example = {k: v[0, 0, 0] for k, v in batches.items()}
+            for e in range(n_epochs):
+                ids = np.flatnonzero(pack.part_mask[e])
+                counts = [0] * pack.n_global
+                for g in ids:
+                    g = int(g)
+                    counts[g] = nbs[g]
+                    for m, n_steps in zip(
+                            *np.unique(pack.step_examples[g],
+                                       return_counts=True)):
+                        b = (example if m == pack.batch_size
+                             else {k: v[:m] for k, v in example.items()})
+                        self.transport.account(self.adapter, b,
+                                               count=int(n_steps))
+                self._record_wire_epoch(example, counts, client_set=ids)
+        return state, logs
+
     def _account_compiled(self, packed, batch_size, n_epochs=1):
         """Analytic accounting for the compiled path: the DP accountant
         composes each hospital's step count in one call, and the transport
@@ -274,18 +384,22 @@ class SplitLearning(Strategy):
         for _ in range(n_epochs):
             self._record_wire_epoch(example, packed.n_batches)
 
-    def _record_wire_epoch(self, example_batch, n_batches):
+    def _record_wire_epoch(self, example_batch, n_batches,
+                           client_set=None):
         """The analytic->timeline bridge hook: hand the transport this
         epoch's schedule signature so ``wire.simulator`` can expand the
         summary accounting back into per-step timelines.  Placement
         phantom rows (zero batches) are sliced off — the recorded
-        signature is placement-independent."""
+        signature is placement-independent.  ``client_set`` marks a
+        participating round's sampled clients (unsampled entries are
+        zero, so the expansion emits no events for them)."""
         n_batches = list(n_batches)[:self.n_clients]
         if self.transport is None or not sum(n_batches):
             return
         self.transport.record_epoch(self.adapter, example_batch,
                                     self.name.rsplit("_", 1)[0],
-                                    self.schedule, n_batches)
+                                    self.schedule, n_batches,
+                                    client_set=client_set)
 
     def _end_of_epoch(self, state):
         pass

@@ -240,6 +240,9 @@ class SplitFedV3(SplitLearning):
 
     def _run_compiled(self, state, client_data, rng, batch_size, n_epochs):
         from repro.core.strategies import engine as ENG
+        if self.participation is not None:
+            return self._run_participation(state, client_data, rng,
+                                           batch_size, n_epochs)
         tel = self._tel
         place = self.placement
         with self._span("pack"):
@@ -296,6 +299,93 @@ class SplitFedV3(SplitLearning):
             for log, r in zip(logs, rounds):
                 log.telemetry = r
         self._account_v3(packed, batch_size, n_epochs)
+        return state, logs
+
+    def _run_participation(self, state, client_data, rng, batch_size,
+                           n_epochs):
+        """Whole participating SplitFedv3/v1 run: K sampled hospitals step
+        batch-synchronously each round; client segments and optimizer rows
+        are gathered/scattered out of the persistent ``[N, ...]`` stacks
+        by global id inside the fused program.
+
+        The steps axis is fixed at the GLOBAL max batch count so the grid
+        never reshapes; rounds whose sampled cohort is shallower mask the
+        tail steps out.  Per-step keys use the full-N virtual grid
+        (round-major), so ``Participation(k=N)`` reproduces
+        ``participation=None`` exactly.  The RDP accountant composes
+        every hospital every round at the amplified rate over the GLOBAL
+        step count — a (documented) conservative bound when a sampled
+        cohort runs fewer steps."""
+        from repro.core.strategies import engine as ENG
+        if self._tel is not None:
+            raise ValueError("participation with observe is not supported "
+                             "for the split family")
+        part = self.participation
+        with self._span("pack"):
+            batches, pack = ENG.pack_participation_run(
+                client_data, batch_size, rng, n_epochs, part, True)
+        nbs = pack.n_batches
+        self._check_batches(nbs, batch_size)
+        NB_N, S = pack.nb_max, pack.n_slots
+        b_idx = np.zeros((n_epochs, NB_N, S), np.int32)
+        step_valid = np.zeros((n_epochs, NB_N), np.float32)
+        key_idx = np.zeros((n_epochs, NB_N), np.uint32)
+        base0 = self._key_step
+        real_steps = []
+        for e in range(n_epochs):
+            gid = pack.slot_gid[e]
+            rs = max(nbs[int(g)] for g in gid if g >= 0)
+            real_steps.append(rs)
+            step_valid[e, :rs] = 1.0
+            for s in range(S):
+                g = int(gid[s])
+                if g >= 0 and nbs[g]:
+                    b_idx[e, :, s] = np.arange(NB_N) % nbs[g]
+            if self._keyed:
+                key_idx[e] = base0 + 1 + e * NB_N + np.arange(NB_N)
+        if self._keyed:
+            self._key_step += n_epochs * NB_N
+        if not hasattr(self, "_run3_part_c"):
+            self._run3_part_c = ENG.make_sflv3_run_participation(
+                self.adapter, self._opt_c, self._opt_s, S, self.n_clients,
+                self.transport, self.privacy,
+                sync_clients=self._sync_stacked)
+        run_fn = self._run3_part_c
+        args = (state["stacked_clients"], state["server"], state["c_opt"],
+                state["s_opt"], batches, b_idx, key_idx, step_valid,
+                self._privacy_base_key(), pack.slot_gid)
+        with self._span("dispatch"):
+            out = run_fn(*args)
+        self._count_dispatch()
+        self._last_run_invocation = (run_fn, ENG.abstract_args(args))
+        (state["stacked_clients"], state["server"], state["c_opt"],
+         state["s_opt"], losses) = out[:5]
+        self._run_calls = getattr(self, "_run_calls", 0) + 1
+        losses = np.asarray(losses)
+        logs = []
+        for e in range(n_epochs):
+            rs = real_steps[e]
+            sampled = set(int(g) for g in pack.slot_gid[e] if g >= 0)
+            csteps = [rs if g in sampled else 0
+                      for g in range(pack.n_global)]
+            logs.append(EpochLog(losses[e, :rs, :].reshape(-1).tolist(),
+                                 rs, client_steps=csteps))
+        # amplified RDP at the global step count (conservative when a
+        # sampled cohort runs fewer); wire sees sampled clients only
+        self._last_part_nbs = [NB_N] * pack.n_global
+        for g in range(pack.n_global):
+            self._dp_account(g, pack.n_samples[g], batch_size,
+                             count=NB_N * n_epochs, q_scale=part.rate)
+        if self.transport is not None:
+            example = {k: v[0, 0, 0] for k, v in batches.items()}
+            for e in range(n_epochs):
+                ids = np.flatnonzero(pack.part_mask[e])
+                rs = real_steps[e]
+                counts = [0] * pack.n_global
+                for g in ids:
+                    counts[int(g)] = rs
+                    self.transport.account(self.adapter, example, count=rs)
+                self._record_wire_epoch(example, counts, client_set=ids)
         return state, logs
 
     def _end_of_epoch(self, state):

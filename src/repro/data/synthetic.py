@@ -62,10 +62,43 @@ def _make_split(rng, n, size, prevalence, shift):
 
 
 def make_cxr_clients(seed=0, n_clients=5, train_per_client=120,
-                     val_per_client=60, test_per_client=60, image_size=64):
+                     val_per_client=60, test_per_client=60, image_size=64,
+                     size_skew=None, label_skew_alpha=None):
     """``train_per_client`` may be an int or a per-client list (the paper's
-    hospitals have very different data volumes — 3772 vs 880)."""
+    hospitals have very different data volumes — 3772 vs 880).
+
+    Two cross-device-realism knobs (both OFF by default — the defaults
+    stay byte-identical because each knob draws from its OWN seeded
+    stream, never the shared shift rng):
+
+    * ``size_skew``: a positive float — per-client train sizes are drawn
+      log-normal around ``train_per_client`` with sigma ``size_skew``
+      (min 2 samples), mimicking the heavy-tailed hospital volumes of a
+      real federation.  Ignored when ``train_per_client`` is a list.
+    * ``label_skew_alpha``: Dirichlet/Beta concentration — each client's
+      TRAIN prevalence is drawn ``Beta(alpha, alpha)`` instead of the
+      paper's uniform 50% (small alpha => clients specialize toward
+      mostly-positive or mostly-negative label pools).  Val/test keep the
+      paper's 10% prevalence.
+    """
     rng = np.random.default_rng(seed)
+    sizes = None
+    if size_skew is not None and not isinstance(train_per_client,
+                                                (list, tuple)):
+        if size_skew <= 0:
+            raise ValueError("size_skew must be positive")
+        size_rng = np.random.default_rng([seed, 1011])
+        sizes = np.maximum(2, np.round(
+            train_per_client
+            * np.exp(size_rng.normal(0.0, size_skew, n_clients))
+        ).astype(int))
+    prevs = None
+    if label_skew_alpha is not None:
+        if label_skew_alpha <= 0:
+            raise ValueError("label_skew_alpha must be positive")
+        label_rng = np.random.default_rng([seed, 2022])
+        prevs = label_rng.beta(label_skew_alpha, label_skew_alpha,
+                               n_clients)
     clients = []
     for c in range(n_clients):
         # strong non-IID scanner shift: even hospitals see BRIGHT lesions,
@@ -82,9 +115,12 @@ def make_cxr_clients(seed=0, n_clients=5, train_per_client=120,
         n_tr = (train_per_client[c] if isinstance(train_per_client,
                                                   (list, tuple))
                 else train_per_client)
+        if sizes is not None:
+            n_tr = int(sizes[c])
+        tr_prev = 0.5 if prevs is None else float(prevs[c])
         clients.append(ClientData(
             name=f"DT{c + 1}",
-            train=_make_split(rng, n_tr, image_size, 0.5, shift),
+            train=_make_split(rng, n_tr, image_size, tr_prev, shift),
             val=_make_split(rng, val_per_client, image_size, 0.1, shift),
             test=_make_split(rng, test_per_client, image_size, 0.1, shift)))
     return clients

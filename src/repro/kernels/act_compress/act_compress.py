@@ -13,12 +13,9 @@ plus the (block_rows, 1) scale column.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-import jax.experimental.pallas.tpu as pltpu
 
 from repro.kernels.compat import INTERPRET, CompilerParams
 

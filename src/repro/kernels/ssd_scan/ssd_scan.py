@@ -16,12 +16,9 @@ Per grid cell (b, c, h):
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-import jax.experimental.pallas.tpu as pltpu
 
 from repro.kernels.compat import CompilerParams
 

@@ -16,7 +16,6 @@ Optional ``compress_boundary`` applies the int8 Pallas link compressor
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -220,10 +220,15 @@ def _scheduled_client_mean(arr, sched, n_clients) -> np.ndarray:
 @dataclasses.dataclass
 class RoundTelemetry:
     """One training round's reduced metrics: every value is a
-    ``[n_clients]`` float array (NaN where a hospital took no step)."""
+    ``[n_clients]`` float array (NaN where a hospital took no step).
+
+    Under per-round client subsampling ``participation`` lists the
+    round's sampled GLOBAL hospital ids; metric columns of unsampled
+    hospitals are NaN for that round."""
     round_index: int
     metrics: dict
     epsilon: np.ndarray | None = None
+    participation: np.ndarray | None = None
 
     def scalars(self) -> dict:
         """Hospital-mean summary of each metric (for printing)."""
@@ -241,6 +246,9 @@ class RoundTelemetry:
                            for k, v in self.metrics.items()}}
         if self.epsilon is not None:
             out["epsilon"] = np.asarray(self.epsilon, np.float64).tolist()
+        if self.participation is not None:
+            out["participation"] = [
+                int(i) for i in np.asarray(self.participation)]
         return out
 
 
@@ -303,6 +311,47 @@ def rounds_client_major(tel: Telemetry, losses, metrics: dict, mask,
     return out
 
 
+def rounds_participation(tel: Telemetry, losses, metrics: dict, pack,
+                         extra: dict | None = None) -> list:
+    """Reduce a participating FL run's SLOT-major stacks ``[E, S, NB]``
+    (+ per-round ``extra`` taps ``[E, S]``) into per-round telemetry over
+    the GLOBAL hospital axis: each slot's per-round mean scatters to its
+    global hospital's column, hospitals not sampled that round are NaN,
+    and ``RoundTelemetry.participation`` records the round's sampled ids.
+    """
+    losses = np.asarray(losses)
+    E, N = losses.shape[0], pack.n_global
+
+    def scatter_slots(e):
+        gid = np.asarray(pack.slot_gid[e])
+
+        def reduce(a):
+            a = np.asarray(a, np.float64)
+            if a.ndim == 2:                       # [S, NB] per-step taps
+                row = _masked_client_mean(a, pack.mask[e], a.shape[0])
+            else:                                 # [S] per-round taps
+                row = a
+            out = _nanrow(N)
+            for s, g in enumerate(gid):
+                if g >= 0 and not np.isnan(row[s]):
+                    out[g] = row[s]
+            return out
+        return reduce
+
+    out = []
+    for e in range(E):
+        reduce = scatter_slots(e)
+        m = _per_metric(tel, losses[e],
+                        {k: np.asarray(v)[e] for k, v in metrics.items()},
+                        reduce)
+        for k, v in (extra or {}).items():
+            m[k] = reduce(np.asarray(v, np.float64)[e])
+        r = RoundTelemetry(e, m)
+        r.participation = np.flatnonzero(np.asarray(pack.part_mask[e]))
+        out.append(r)
+    return out
+
+
 def rounds_scheduled(tel: Telemetry, losses, metrics: dict, sched,
                      n_clients: int) -> list:
     """Reduce SL/SFLv2 stacks ``[E, S]`` through the schedule array."""
@@ -354,7 +403,8 @@ def pack_client_major(values: list, n_batches: list):
 # ---------------------------------------------------------------------------
 
 def epsilon_rounds(privacy, logs, n_samples: list, batch_size: int,
-                   pooled: bool = False) -> np.ndarray | None:
+                   pooled: bool = False, q_scale: float = 1.0,
+                   steps_override: list | None = None) -> np.ndarray | None:
     """``[n_rounds, n_clients]`` cumulative (eps at delta) after each
     round, composed from the SAME per-round step counts and sampling
     rates the strategies feed the real accountant (``EpochLog.
@@ -364,6 +414,14 @@ def epsilon_rounds(privacy, logs, n_samples: list, batch_size: int,
     ``pooled`` is the centralized case: every hospital's records sit in
     the pooled set, so each composes at the pooled sampling rate over the
     pooled step count.
+
+    Under client subsampling (``Participation`` with sampling randomness)
+    EVERY hospital composes EVERY round at the amplified rate
+    ``q_scale * q_batch`` over the step count it would contribute when
+    sampled — pass that count per hospital as ``steps_override`` (the
+    realized ``client_steps`` are zero for unsampled rounds and must NOT
+    be used, since amplification accounts the sampling probability, not
+    the realization).
     """
     if privacy is None or not privacy.dp_enabled:
         return None
@@ -380,9 +438,12 @@ def epsilon_rounds(privacy, logs, n_samples: list, batch_size: int,
                             log.steps)
             else:
                 q = min(batch_size / max(n_samples[c], 1), 1.0)
-                steps = (log.client_steps[c]
-                         if log.client_steps is not None else log.steps)
-            accts[c].step(q, steps)
+                if steps_override is not None:
+                    steps = steps_override[c]
+                else:
+                    steps = (log.client_steps[c]
+                             if log.client_steps is not None else log.steps)
+            accts[c].step(q * q_scale, steps)
             out[e, c] = accts[c].epsilon()[0]
     return out
 
@@ -390,5 +451,6 @@ def epsilon_rounds(privacy, logs, n_samples: list, batch_size: int,
 __all__ = ["Telemetry", "RoundTelemetry", "RunTelemetry", "as_telemetry",
            "global_norm", "stacked_global_norm", "payload_moments",
            "combine_moments", "moments_to_stats", "clip_fraction",
-           "observing_boundary", "rounds_client_major", "rounds_scheduled",
-           "rounds_sync", "pack_client_major", "epsilon_rounds"]
+           "observing_boundary", "rounds_client_major",
+           "rounds_participation", "rounds_scheduled", "rounds_sync",
+           "pack_client_major", "epsilon_rounds"]

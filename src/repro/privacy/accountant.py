@@ -23,7 +23,6 @@ from __future__ import annotations
 
 import math
 
-import numpy as np
 
 DEFAULT_ORDERS = tuple(range(2, 65)) + (80, 96, 128, 192, 256)
 

@@ -7,7 +7,6 @@ filled in one pass, last-position logits returned), per the assignment.
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -40,12 +40,18 @@ class EpochSchedule:
     expand the epoch's analytic accounting back into per-step transfers:
     the method kind, the client interleaving, per-client train batch
     counts, and the per-leg on-wire/raw byte sizes (``core.comm.leg_sizes``
-    through this transport's codec)."""
+    through this transport's codec).
+
+    Under per-round client subsampling ``client_set`` records which
+    global clients participated this round; unsampled clients carry a
+    zero ``tr_counts`` entry, so the expansion naturally emits no
+    transfers for them."""
     kind: str                   # "sl" | "sflv2" | "sflv3" | "sflv1"
     schedule: str               # "ac" | "am"
     tr_counts: tuple            # per-client train batch counts
     legs: dict                  # leg name -> bytes (act_fm, act_mt, ...)
     nls: bool
+    client_set: tuple | None = None   # sampled global client ids (or None)
 
 
 @dataclasses.dataclass
@@ -121,13 +127,14 @@ class Transport:
         self.steps += count
 
     def record_epoch(self, adapter, example_batch: dict, kind: str,
-                     schedule: str, n_batches) -> None:
+                     schedule: str, n_batches, client_set=None) -> None:
         """Append one trained epoch's schedule signature to ``epoch_log``.
 
         Called once per epoch by the SL/SFL strategies under BOTH engines
         (the stepwise per-step path and the compiled analytic path record
         identical signatures), which is what makes
         ``simulator.timeline_from_accounting`` engine-independent.
+        ``client_set`` marks a participating round's sampled clients.
         """
         key = ("legs", *self._shape_key(adapter, example_batch))
         if key not in self._cache:
@@ -136,7 +143,9 @@ class Transport:
                                          codec=self.codec)
         self.epoch_log.append(EpochSchedule(
             kind, schedule, tuple(int(n) for n in n_batches),
-            self._cache[key], adapter.nls))
+            self._cache[key], adapter.nls,
+            None if client_set is None
+            else tuple(int(c) for c in client_set)))
 
     @property
     def compression_ratio(self) -> float:

@@ -22,7 +22,6 @@ import sys
 
 import jax
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
 from repro import optim as O
 from repro.core.partition import cnn_adapter

@@ -1,0 +1,234 @@
+"""repro.core.aggregate: pluggable aggregation rules.
+
+Covers the registry, the bit-identity of the default weighted mean with
+the pre-refactor expressions, the zero-total-weight guards (S1: an empty
+Poisson round must keep the previous globals, never NaN them), and the
+semantics of the robust/staleness/hierarchical aggregators.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregate as AGG
+from repro.core.partition import stack_trees
+
+
+def _trees(vals):
+    return [{"w": jnp.asarray(v, jnp.float32),
+             "b": jnp.asarray([v[0] * 2.0], jnp.float32)} for v in vals]
+
+
+def _flat(tree):
+    return np.concatenate([np.asarray(l, np.float64).ravel()
+                           for l in jax.tree.leaves(tree)])
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_lookup_and_default():
+    assert isinstance(AGG.make_aggregator(None), AGG.WeightedMean)
+    assert isinstance(AGG.make_aggregator("weighted_mean"), AGG.WeightedMean)
+    assert isinstance(AGG.make_aggregator("trimmed_mean"), AGG.TrimmedMean)
+    agg = AGG.TrimmedMean(trim=0.2)
+    assert AGG.make_aggregator(agg) is agg
+    with pytest.raises(ValueError, match="weighted_mean"):
+        AGG.make_aggregator("nope")
+    with pytest.raises(TypeError):
+        AGG.make_aggregator(3.0)
+
+
+def test_registry_register_custom():
+    class Custom(AGG.Aggregator):
+        name = "custom_test"
+
+        def aggregate(self, stacked, weights, prev, staleness=None,
+                      gids=None):
+            return AGG.weighted_mean_guarded(stacked, weights, prev)
+
+    AGG.register("custom_test", Custom)
+    try:
+        assert isinstance(AGG.make_aggregator("custom_test"), Custom)
+    finally:
+        del AGG.AGGREGATORS["custom_test"]
+
+
+# ---------------------------------------------------------------------------
+# weighted mean: bit-identity with the naive expression + zero guards (S1)
+# ---------------------------------------------------------------------------
+
+def test_tree_weighted_mean_matches_naive():
+    trees = _trees([[1.0, 2.0], [3.0, 4.0], [5.0, 6.0]])
+    weights = [17, 12, 9]
+    got = AGG.tree_weighted_mean(trees, weights)
+    total = sum(weights)
+    want = jax.tree.map(
+        lambda *xs: sum(w * x for w, x in zip(weights, xs)) / total, *trees)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_tree_weighted_mean_zero_total_keeps_prev():
+    trees = _trees([[1.0, 2.0], [3.0, 4.0]])
+    prev = {"w": jnp.asarray([9.0, 9.0], jnp.float32),
+            "b": jnp.asarray([9.0], jnp.float32)}
+    got = AGG.tree_weighted_mean(trees, [0, 0], prev=prev)
+    assert np.array_equal(_flat(got), _flat(prev))
+    # without prev: falls back to the unweighted mean, still finite
+    got2 = AGG.tree_weighted_mean(trees, [0, 0])
+    assert np.all(np.isfinite(_flat(got2)))
+
+
+def test_stacked_weighted_mean_zero_total_keeps_prev():
+    trees = _trees([[1.0, 2.0], [3.0, 4.0]])
+    stacked = stack_trees(trees)
+    prev = trees[0]
+    got = AGG.stacked_weighted_mean(stacked, np.zeros(2, np.float32), prev)
+    assert np.array_equal(_flat(got), _flat(prev))
+    # positive weights: matches the eager tree path exactly
+    w = np.asarray([3.0, 1.0], np.float32)
+    a = AGG.stacked_weighted_mean(stacked, w)
+    b = AGG.tree_weighted_mean(trees, list(w))
+    np.testing.assert_allclose(_flat(a), _flat(b), atol=1e-6)
+
+
+def test_weighted_mean_guarded_traced_zero_guard():
+    trees = _trees([[1.0, 2.0], [3.0, 4.0]])
+    stacked = stack_trees(trees)
+    prev = trees[1]
+
+    @jax.jit
+    def agg(s, w, p):
+        return AGG.weighted_mean_guarded(s, w, p)
+
+    got = agg(stacked, jnp.zeros(2), prev)
+    assert np.array_equal(_flat(got), _flat(prev))
+    got2 = agg(stacked, jnp.asarray([1.0, 3.0]), prev)
+    assert np.all(np.isfinite(_flat(got2)))
+
+
+# ---------------------------------------------------------------------------
+# robust rules
+# ---------------------------------------------------------------------------
+
+def test_trimmed_mean_drops_outlier():
+    # 5 honest rows around 1.0 plus one byzantine row at 1e6
+    vals = [[1.0, 1.0], [1.1, 0.9], [0.9, 1.1], [1.0, 1.2], [1.2, 0.8],
+            [1e6, -1e6]]
+    stacked = stack_trees(_trees(vals))
+    w = jnp.ones(6)
+    agg = AGG.TrimmedMean(trim=0.2)   # floor(0.2 * 6) = 1 from each end
+    out = agg.host(stacked, w, prev=_trees(vals)[0])
+    flat = _flat(out)
+    assert np.all(np.abs(flat) < 10.0), flat
+
+
+def test_trimmed_mean_ignores_zero_weight_rows():
+    vals = [[1.0, 1.0], [3.0, 3.0], [1e9, 1e9]]
+    stacked = stack_trees(_trees(vals))
+    w = jnp.asarray([1.0, 1.0, 0.0])   # byzantine row wasn't sampled
+    agg = AGG.TrimmedMean(trim=0.0)
+    out = agg.host(stacked, w, prev=_trees(vals)[0])
+    np.testing.assert_allclose(np.asarray(out["w"]), [2.0, 2.0], atol=1e-6)
+
+
+def test_coordinate_median():
+    vals = [[1.0, 10.0], [2.0, 20.0], [100.0, 30.0]]
+    stacked = stack_trees(_trees(vals))
+    agg = AGG.CoordinateMedian()
+    out = agg.host(stacked, jnp.ones(3), prev=_trees(vals)[0])
+    np.testing.assert_allclose(np.asarray(out["w"]), [2.0, 20.0], atol=1e-6)
+    # even count: midpoint of the two central order statistics
+    out2 = agg.host(stack_trees(_trees(vals[:2])), jnp.ones(2),
+                    prev=_trees(vals)[0])
+    np.testing.assert_allclose(np.asarray(out2["w"]), [1.5, 15.0],
+                               atol=1e-6)
+
+
+def test_coordinate_median_zero_total_keeps_prev():
+    vals = [[1.0, 2.0], [3.0, 4.0]]
+    stacked = stack_trees(_trees(vals))
+    prev = _trees(vals)[1]
+    out = AGG.CoordinateMedian().host(stacked, jnp.zeros(2), prev=prev)
+    assert np.array_equal(_flat(out), _flat(prev))
+
+
+def test_staleness_discounted():
+    vals = [[0.0, 0.0], [4.0, 4.0]]
+    stacked = stack_trees(_trees(vals))
+    prev = _trees(vals)[0]
+    agg = AGG.StalenessDiscounted(decay=0.5)
+    # row 1 is 2 rounds stale: weight 1 * 0.5^2 = 0.25 against 1.0
+    out = agg.aggregate(stacked, jnp.ones(2), prev,
+                        staleness=jnp.asarray([0.0, 2.0]))
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               [4.0 * 0.25 / 1.25] * 2, atol=1e-6)
+    # no staleness given: plain weighted mean
+    out2 = agg.host(stacked, jnp.ones(2), prev)
+    np.testing.assert_allclose(np.asarray(out2["w"]), [2.0, 2.0],
+                               atol=1e-6)
+
+
+def test_hierarchical_two_tier():
+    # regions (0, 0, 1): tier-1 weighted means inside each region, tier-2
+    # UNWEIGHTED mean over the two non-empty regions
+    vals = [[0.0, 0.0], [2.0, 2.0], [10.0, 10.0]]
+    stacked = stack_trees(_trees(vals))
+    prev = _trees(vals)[0]
+    agg = AGG.Hierarchical(regions=(0, 0, 1))
+    out = agg.host(stacked, jnp.asarray([1.0, 3.0, 1.0]), prev)
+    # region 0: (0*1 + 2*3)/4 = 1.5 ; region 1: 10 ; tier2: 5.75
+    np.testing.assert_allclose(np.asarray(out["w"]), [5.75, 5.75],
+                               atol=1e-6)
+    # a region whose hospitals were all unsampled drops out of tier 2
+    out2 = agg.host(stacked, jnp.asarray([1.0, 3.0, 0.0]), prev)
+    np.testing.assert_allclose(np.asarray(out2["w"]), [1.5, 1.5],
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# the strategies' aggregation endpoints (S1 regression: empty FL round)
+# ---------------------------------------------------------------------------
+
+def test_fl_run_with_robust_aggregator():
+    from repro import optim as O
+    from repro.core.partition import cnn_adapter
+    from repro.core.strategies import make_strategy
+    from repro.data.synthetic import make_cxr_clients
+    from repro.models.cnn import DenseNetConfig, build_densenet
+
+    clients = make_cxr_clients(seed=0, train_per_client=12,
+                               val_per_client=4, test_per_client=4,
+                               image_size=16, n_clients=3)
+    adapter = cnn_adapter(build_densenet(
+        DenseNetConfig(growth=2, blocks=(1, 1), stem_ch=4, cut_layer=1)))
+    for spec in ["trimmed_mean", "coordinate_median"]:
+        st = make_strategy("fl", adapter, lambda: O.adam(1e-3), 3,
+                           aggregator=spec)
+        state = st.setup(jax.random.key(0))
+        state, logs = st.run(state, [c.train for c in clients],
+                             np.random.default_rng(0), 4, 2)
+        assert st._dispatches == 1          # still ONE fused dispatch
+        flat = _flat(st.params_for_eval(state, 0))
+        assert np.all(np.isfinite(flat))
+
+
+def test_aggregator_rejected_outside_fl():
+    from repro import optim as O
+    from repro.core.partition import cnn_adapter
+    from repro.core.strategies import make_strategy
+    from repro.models.cnn import DenseNetConfig, build_densenet
+
+    adapter = cnn_adapter(build_densenet(
+        DenseNetConfig(growth=2, blocks=(1, 1), stem_ch=4, cut_layer=1)))
+    with pytest.raises(ValueError, match="fl only"):
+        make_strategy("sl_ac", adapter, lambda: O.adam(1e-3), 3,
+                      aggregator="trimmed_mean")
+    with pytest.raises(ValueError, match="secagg"):
+        from repro.privacy import PrivacyConfig
+        make_strategy("fl", adapter, lambda: O.adam(1e-3), 3,
+                      privacy=PrivacyConfig(secagg=True),
+                      aggregator="trimmed_mean")

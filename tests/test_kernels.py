@@ -11,7 +11,7 @@ from repro.kernels.ssd_scan.ops import ssd
 from repro.kernels.ssd_scan.ref import ssd_ref
 from repro.kernels.act_compress.ops import (quantize, dequantize,
                                             compress_boundary)
-from repro.kernels.act_compress.ref import quantize_ref, roundtrip_ref
+from repro.kernels.act_compress.ref import quantize_ref
 
 
 @pytest.mark.parametrize("b,h,kv,s,d", [
@@ -124,7 +124,6 @@ def test_compress_boundary_gradient_is_identity():
 # sqrt(2) with the std scale only under jit — identically for both paths,
 # so the fused/unfused comparison stays exact in either mode.
 
-from repro.kernels.cut_fuse.cut_fuse import pin_product
 from repro.kernels.cut_fuse.ops import (cut_noise_roundtrip, fused_roundtrip,
                                         roundtrip_boundary)
 from repro.kernels.cut_fuse.ref import noise_roundtrip_ref

@@ -8,7 +8,6 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.launch.hlo_analysis import analyze

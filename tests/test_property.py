@@ -219,6 +219,114 @@ def test_quantize_roundtrip_bound(rows, cols, scale):
 
 
 # ---------------------------------------------------------------------------
+# RDP accountant monotonicity (participation satellite: the amplified
+# rate q_round * q_batch must never report MORE privacy spend than the
+# unamplified run it bounds)
+# ---------------------------------------------------------------------------
+
+@_settings
+@given(st.floats(0.7, 4.0), st.floats(0.01, 0.5), st.floats(0.5, 1.0),
+       st.integers(1, 400))
+def test_epsilon_monotone_in_sampling_rate(nm, q, bump, steps):
+    """eps is non-decreasing in q — subsampling amplification: training a
+    cohort at rate q_round * q never costs more than rate q."""
+    from repro.privacy.accountant import epsilon
+    lo = epsilon(nm, q * bump, steps)
+    hi = epsilon(nm, q, steps)
+    assert lo <= hi + 1e-12
+    if bump < 0.999 and hi > 0:
+        assert lo < hi                 # strictly amplified
+
+
+@_settings
+@given(st.floats(0.7, 4.0), st.floats(0.01, 1.0), st.integers(1, 300),
+       st.integers(1, 300))
+def test_epsilon_monotone_in_steps(nm, q, s1, extra):
+    from repro.privacy.accountant import epsilon
+    assert epsilon(nm, q, s1) <= epsilon(nm, q, s1 + extra) + 1e-12
+    assert epsilon(nm, q, s1) < epsilon(nm, q, s1 + extra)
+
+
+@_settings
+@given(st.floats(0.7, 4.0), st.floats(0.01, 1.0), st.integers(1, 100),
+       st.integers(1, 100))
+def test_epsilon_round_composition_additive(nm, q, r1, r2):
+    """Composing rounds incrementally == one shot at the total count (the
+    RDP ledger is additive), so per-round accounting under participation
+    matches whole-run accounting exactly."""
+    from repro.privacy.accountant import RDPAccountant
+    a = RDPAccountant(nm)
+    a.step(q, r1)
+    a.step(q, r2)
+    b = RDPAccountant(nm)
+    b.step(q, r1 + r2)
+    assert a.steps == b.steps
+    assert a.epsilon() == b.epsilon()
+
+
+# ---------------------------------------------------------------------------
+# secure aggregation == plain weighted mean (to fixed-point resolution)
+# ---------------------------------------------------------------------------
+
+@_settings
+@given(st.integers(2, 6), st.integers(1, 3),
+       st.lists(st.integers(1, 500), min_size=6, max_size=6),
+       st.integers(0, 2 ** 16))
+def test_secagg_matches_weighted_mean(n, leaves, weights, seed):
+    """The pairwise masks must telescope to EXACTLY zero: the modular sum
+    of masked fixed-point uploads equals the weighted mean to one
+    quantization step per client, for any weights and group size."""
+    from repro.privacy.secagg import SecAgg
+    weights = weights[:n]
+    rng = np.random.default_rng(7)
+    trees = [{f"w{i}": jnp.asarray(rng.normal(0, 1, (5,)), jnp.float32)
+              for i in range(leaves)} for _ in range(n)]
+    out = SecAgg(n, seed=seed).aggregate_weighted(
+        [jax.tree.map(np.asarray, t) for t in trees], list(weights))
+    want = tree_weighted_mean(trees, weights)
+    tol = n * 2.0 ** -15               # frac_bits=16 rounding per client
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(a, np.float64),
+                                   np.asarray(b, np.float64), atol=tol)
+    # determinism: a fresh group with the same seed reproduces the bits
+    out2 = SecAgg(n, seed=seed).aggregate_weighted(
+        [jax.tree.map(np.asarray, t) for t in trees], list(weights))
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(out2)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# participation sampling invariants
+# ---------------------------------------------------------------------------
+
+@_settings
+@given(st.integers(1, 40), st.integers(0, 200), st.integers(0, 2 ** 16))
+def test_participation_fixed_draws(n, rnd, seed):
+    from repro.core.participation import Participation
+    k = max(1, n // 3)
+    p = Participation(n_global=n, k=k, seed=seed)
+    ids = p.round_ids(rnd)
+    assert len(ids) == k == p.n_slots
+    assert len(set(ids.tolist())) == k
+    assert ((0 <= ids) & (ids < n)).all()
+    assert np.array_equal(ids, np.sort(ids))
+    assert np.array_equal(ids, p.round_ids(rnd))   # round-addressable
+
+
+@_settings
+@given(st.integers(2, 40), st.floats(0.05, 0.95), st.integers(0, 100),
+       st.integers(0, 2 ** 16))
+def test_participation_poisson_draws(n, q, rnd, seed):
+    from repro.core.participation import Participation
+    p = Participation(n_global=n, q=q, seed=seed)
+    ids = p.round_ids(rnd)
+    assert len(ids) <= p.n_slots == n
+    assert len(set(ids.tolist())) == len(ids)
+    assert all(0 <= i < n for i in ids.tolist())
+    assert p.rate == q
+
+
+# ---------------------------------------------------------------------------
 # wire accounting: wire_bytes(spec) == the ACTUAL encoded payload bytes
 # ---------------------------------------------------------------------------
 

@@ -8,7 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import optim as O
-from repro.data.synthetic import (batches, lm_clients, make_cxr_clients,
+from repro.data.synthetic import (batches, make_cxr_clients,
                                   pooled, token_stream)
 from repro.train import checkpoint
 

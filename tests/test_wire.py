@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.core.comm import client_batch_counts, comm_per_epoch, leg_sizes
-from repro.core.partition import cnn_adapter, leaf_bytes
+from repro.core.partition import cnn_adapter
 from repro.kernels.act_compress.act_compress import (dequantize_pallas,
                                                      quantize_pallas)
 from repro.kernels.act_compress.ref import (dequantize_ref, quantize_ref,
