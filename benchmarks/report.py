@@ -1,6 +1,7 @@
 """Generates the EXPERIMENTS.md tables from benchmarks/results/*.json.
 
-  PYTHONPATH=src python -m benchmarks.report [--section repro|dryrun|roofline]
+  PYTHONPATH=src python -m benchmarks.report
+      [--section repro|dryrun|roofline|serving]
 """
 
 from __future__ import annotations
@@ -131,6 +132,37 @@ def roofline_section(results="benchmarks/results"):
     return "\n".join(out)
 
 
+def serving_section(results="benchmarks/results"):
+    """Latency/throughput tables from BENCH_serving.json — the deploy-side
+    trajectory next to the engine and wire sections."""
+    path = os.path.join(results, "BENCH_serving.json")
+    if not os.path.exists(path):
+        return "(no BENCH_serving.json — run benchmarks.serving_bench)"
+    r = json.load(open(path))
+    out = [f"Device: {r.get('device', '?')} · max-wait "
+           f"{r.get('max_wait_ms', '?')} ms · pre-lowered buckets "
+           f"{r.get('buckets', [])} (fresh compiles in steady state: 0, "
+           "asserted)\n",
+           "### Batch sweep (closed loop, per-dispatch)\n",
+           "| family | bucket | p50 ms | p99 ms | images/s |",
+           "|---|---|---|---|---|"]
+    for row in r.get("batch_sweep", []):
+        out.append(f"| {row['family']} | {row['bucket']} | "
+                   f"{row['p50_ms']:.2f} | {row['p99_ms']:.2f} | "
+                   f"{row['images_per_sec']:.0f} |")
+    out += ["\n### Arrival sweep (open loop, per-request through the "
+            "batching queue)\n",
+            "| family | rate req/s | p50 ms | p99 ms | achieved req/s | "
+            "mean batch |",
+            "|---|---|---|---|---|---|"]
+    for row in r.get("arrival_sweep", []):
+        out.append(f"| {row['family']} | {row['rate_rps']:g} | "
+                   f"{row['p50_ms']:.2f} | {row['p99_ms']:.2f} | "
+                   f"{row['throughput_rps']:.1f} | "
+                   f"{row['batch_n_mean']:.2f} |")
+    return "\n".join(out)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all")
@@ -142,6 +174,8 @@ def main():
         print("\n## §Dry-run\n" + dryrun_section())
     if args.section in ("all", "roofline"):
         print("\n## §Roofline\n" + roofline_section())
+    if args.section in ("all", "serving"):
+        print("\n## §Serving\n" + serving_section())
 
 
 if __name__ == "__main__":

@@ -51,6 +51,21 @@ def main():
         metrics = strat.evaluate(state, clients, "test", batch_size=32)
         print(f"[{method}] test {metrics}  ({time.time() - t0:.0f}s)\n")
 
+    # serve the result: export hospital 0's deployable model (its own
+    # front + the shared server, stitched at the cut) into a batched
+    # screening service — pre-lowered bucket ladder, so steady-state
+    # requests never compile; scores are bit-identical to strat.scores.
+    # See DESIGN.md §15 and examples/train_and_serve.py for hot-swapping
+    # each round's export into a live service.
+    from repro.serving import ScreeningService
+    servable = strat.export(state, client_idx=0)
+    with ScreeningService(servable, image_shape=(32, 32, 1),
+                          max_wait_s=0.002) as svc:
+        score = svc.score_one({"image": clients[0].test["image"][0]})
+        print(f"[serve] {servable.family} export v{svc.version}: "
+              f"first test image scores {score:.4f} "
+              f"(p50 {svc.stats()['total_p50_ms']:.2f} ms)")
+
 
 if __name__ == "__main__":
     main()

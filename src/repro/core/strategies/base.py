@@ -156,6 +156,26 @@ class Strategy:
         """Full param dict (all segments) used to score client ``client_idx``."""
         raise NotImplementedError
 
+    # -- deployment (repro.serving) -------------------------------------------
+    def export(self, state, client_idx: int = 0, meta: dict | None = None):
+        """Materialize the deployable full model as a ``ServableModel``.
+
+        FL/centralized export the one global tree (``client_idx`` is
+        moot); the split family exports hospital ``client_idx``'s client
+        segment(s) stitched with the shared server segment at the cut —
+        the exact composition ``params_for_eval`` scores with, so the
+        export's scores are bit-identical to this strategy's eval
+        (``ServableModel.scores`` replays the same compiled program).
+        Round-trip through ``repro.serving.export.save_servable``.
+        """
+        from repro.serving.export import ServableModel
+        params = jax.tree.map(np.asarray,
+                              self.params_for_eval(state, client_idx))
+        m = {"strategy": self.name, "client_idx": int(client_idx),
+             "n_clients": self.n_clients, **(meta or {})}
+        return ServableModel(adapter=self.adapter, params=params,
+                             shared=self.shared_eval_params, meta=m)
+
     # -- whole-run training ----------------------------------------------------
     @property
     def _whole_run(self) -> bool:
@@ -386,7 +406,44 @@ class Strategy:
         return stack_trees([self.params_for_eval(state, i)
                             for i in range(self.n_clients)])
 
-    def scores_all(self, state, datas: list, batch_size=60):
+    def _dispatch_scores(self, params, stacked, placed=False,
+                         chunk_batches=None, place=None):
+        """Run the vmapped scorer over a ``[C, nb, bs, ...]`` data stack,
+        optionally chunking the batch axis so an epoch larger than one
+        device batch never materializes as a single device buffer.
+
+        Chunks are fixed-shape ``[C, chunk, bs, ...]`` slices (the last
+        chunk pads by repeating its final batch slice, scores sliced
+        off), so the chunked path compiles ONE extra program total and
+        its per-example math is the same vmapped scorer — parity with
+        the unchunked dispatch is tested at <=1e-5.  Returns
+        ``[C, nb * bs, ...]``.
+        """
+        fn = self._scores_all_fn(placed)
+        nb = next(iter(stacked.values())).shape[1]
+        put = (place.put if placed and place is not None
+               else (lambda t: t))
+        if chunk_batches is None or int(chunk_batches) >= nb:
+            out = np.asarray(fn(params, put(stacked)))
+            return out.reshape(out.shape[0], -1, *out.shape[3:])
+        ch = int(chunk_batches)
+        if ch < 1:
+            raise ValueError("chunk_batches must be >= 1")
+        outs = []
+        for s in range(0, nb, ch):
+            sl = {k: v[:, s:s + ch] for k, v in stacked.items()}
+            m = min(ch, nb - s)
+            if m < ch:
+                sl = {k: np.concatenate(
+                    [v, np.repeat(v[:, -1:], ch - m, axis=1)], axis=1)
+                    for k, v in sl.items()}
+            o = np.asarray(fn(params, put(sl)))
+            outs.append(o[:, :m])
+        out = np.concatenate(outs, axis=1)
+        return out.reshape(out.shape[0], -1, *out.shape[3:])
+
+    def scores_all(self, state, datas: list, batch_size=60,
+                   chunk_batches=None):
         """Per-sample scores for every hospital in a single jitted dispatch.
 
         Each hospital's split is padded (repeating the last row — the
@@ -396,6 +453,12 @@ class Strategy:
         the hospital axis of the data stack (and the stacked params) is
         padded to the mesh multiple and placed on the "hosp" mesh —
         phantom-row scores are computed and discarded.
+
+        ``chunk_batches`` caps how many padded batches one dispatch
+        scores: an epoch bigger than one device batch streams through
+        fixed-shape ``[C, chunk_batches, bs, ...]`` slices instead of
+        materializing the whole grid on device (parity <=1e-5 with the
+        unchunked path; ``None`` keeps the single dispatch).
         """
         ns = [len(d["label"]) for d in datas]
         n_max = max(ns, default=0)
@@ -420,19 +483,22 @@ class Strategy:
         place = self.placement
         placed = place.enabled and len(datas) == self.n_clients
         if placed:
-            stacked = place.put({k: place.pad_rows(v)
-                                 for k, v in stacked.items()})
+            stacked = {k: place.pad_rows(v) for k, v in stacked.items()}
             if not self.shared_eval_params:
                 params = place.put(place.pad_tree(params))
-        out = np.asarray(self._scores_all_fn(placed)(params, stacked))
-        out = out.reshape(out.shape[0], L, *out.shape[3:])
+        out = self._dispatch_scores(params, stacked, placed=placed,
+                                    chunk_batches=chunk_batches,
+                                    place=place)
         return [out[i, :ns[i]] for i in range(len(datas))]
 
-    def scores(self, state, client_idx, data, batch_size=60):
+    def scores(self, state, client_idx, data, batch_size=60,
+               chunk_batches=None):
         """Per-sample scores for EVERY sample of one hospital (the final
         partial batch is padded and sliced, so small hospitals never lose
         eval samples).  Routed through the same vmapped scorer as
-        ``scores_all`` with a singleton hospital axis."""
+        ``scores_all`` with a singleton hospital axis; ``chunk_batches``
+        streams large datasets through fixed-shape slices exactly as in
+        ``scores_all``."""
         n = len(data["label"])
         if n == 0:
             return np.zeros((0,))
@@ -447,8 +513,9 @@ class Strategy:
             if len(v) != L:
                 v = np.concatenate([v, np.repeat(v[-1:], L - len(v), axis=0)])
             stacked[k] = v.reshape(1, nb, bs, *v.shape[1:])
-        out = np.asarray(self._scores_all_fn()(params, stacked))
-        return out.reshape(L, *out.shape[3:])[:n]
+        out = self._dispatch_scores(params, stacked,
+                                    chunk_batches=chunk_batches)
+        return out[0][:n]
 
     def evaluate(self, state, clients, split="test", batch_size=60):
         """Pooled metrics across clients, each scored by its own front —

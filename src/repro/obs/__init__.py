@@ -14,12 +14,12 @@ Four layers, threaded through the strategy stack (DESIGN.md §12):
 
 from repro.obs.telemetry import (RoundTelemetry, RunTelemetry, Telemetry,
                                  as_telemetry)
-from repro.obs.trace import (Tracer, merge_events, round_events,
-                             wire_events, write_chrome_trace)
+from repro.obs.trace import (PID_SERVING, Tracer, merge_events,
+                             round_events, wire_events, write_chrome_trace)
 from repro.obs.profile import cost_summary, hlo_cost, jax_profile
 from repro.obs.report import render_markdown, write_runlog
 
 __all__ = ["Telemetry", "RoundTelemetry", "RunTelemetry", "as_telemetry",
            "Tracer", "merge_events", "round_events", "wire_events",
-           "write_chrome_trace", "cost_summary", "hlo_cost", "jax_profile",
-           "render_markdown", "write_runlog"]
+           "write_chrome_trace", "PID_SERVING", "cost_summary", "hlo_cost",
+           "jax_profile", "render_markdown", "write_runlog"]

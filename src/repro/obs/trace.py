@@ -31,6 +31,7 @@ import numpy as np
 
 PID_ENGINE = 1
 PID_WIRE = 2
+PID_SERVING = 3
 
 
 def _meta(pid, name, tid=None, tname=None):
@@ -70,6 +71,23 @@ class Tracer:
                 "dur": max(self._now_us() - t0, 0.01),
                 "pid": self.pid, "tid": self.tid,
                 "args": {**args, "depth": self._depth}})
+
+    def event(self, name: str, t0_s: float, t1_s: float,
+              tid: int | None = None, **args) -> None:
+        """Record an externally-timed complete span from a pair of
+        ``tracer.now()`` readings (seconds since this tracer's epoch) —
+        used by the serving front end, whose phases are timed where they
+        happen (enqueue in the caller, dispatch in the batcher thread)
+        rather than around a single ``with`` block."""
+        self.events.append({
+            "name": name, "ph": "X", "ts": t0_s * 1e6,
+            "dur": max((t1_s - t0_s) * 1e6, 0.01),
+            "pid": self.pid, "tid": self.tid if tid is None else tid,
+            "args": args})
+
+    def now(self) -> float:
+        """Seconds since this tracer's epoch (pairs with ``event``)."""
+        return time.perf_counter() - self._t0
 
     def find(self, name: str) -> dict | None:
         """Most recent finished span with this name (e.g. "dispatch")."""
@@ -165,4 +183,4 @@ def write_chrome_trace(events: list, path) -> str:
 
 
 __all__ = ["Tracer", "round_events", "wire_events", "merge_events",
-           "write_chrome_trace", "PID_ENGINE", "PID_WIRE"]
+           "write_chrome_trace", "PID_ENGINE", "PID_WIRE", "PID_SERVING"]

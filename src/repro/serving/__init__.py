@@ -1,0 +1,28 @@
+"""repro.serving — the deploy side of the train→deploy loop.
+
+Four pieces close the loop over the five training strategies
+(DESIGN.md §15):
+
+  * ``export``  — ``Strategy.export(state) -> ServableModel``: the full
+                  deployable model (split halves stitched at the cut),
+                  round-trippable via ``save_servable``/``load_servable``.
+  * ``scorer``  — ``BucketScorer``: pre-lowered padded-bucket AOT scoring
+                  programs (zero fresh compiles in steady state) behind a
+                  hot-swappable ``ModelSlot``.
+  * ``batcher`` — ``RequestBatcher``/``ScreeningService``: queue that
+                  coalesces single-image requests into the largest ready
+                  bucket under a max-wait, with backpressure, per-request
+                  latency accounting, and ``repro.obs`` trace lanes.
+  * ``engine``  — the sequence-model decode path (KV-cache prefill +
+                  jit-once greedy decode), independent of the CNN service.
+"""
+
+from repro.serving.batcher import (Backpressure, RequestBatcher,
+                                   ScreeningService)
+from repro.serving.export import ServableModel, load_servable, save_servable
+from repro.serving.scorer import (DEFAULT_BUCKETS, BucketScorer, ModelSlot,
+                                  PRECISIONS)
+
+__all__ = ["ServableModel", "save_servable", "load_servable",
+           "BucketScorer", "ModelSlot", "DEFAULT_BUCKETS", "PRECISIONS",
+           "RequestBatcher", "ScreeningService", "Backpressure"]

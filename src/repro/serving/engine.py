@@ -7,6 +7,7 @@ filled in one pass, last-position logits returned), per the assignment.
 
 from __future__ import annotations
 
+import weakref
 
 import jax
 import jax.numpy as jnp
@@ -33,13 +34,41 @@ def make_decode_step(model):
     return decode_step
 
 
+# one jitted decode step per live model: jitting inside greedy_generate
+# rebuilt the traced callable every call, so repeated generations paid a
+# fresh trace each time.  Models are frozen dataclasses (hashable and
+# weakref-able), so a WeakKeyDictionary keeps one compiled step per model
+# without pinning dead models; unhashable/unweakrefable models fall back
+# to an uncached jit.
+_DECODE_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def jitted_decode_step(model):
+    """The per-model decode step, jitted ONCE (donating the running cache
+    buffer — each decode step consumes the old cache and returns the
+    updated one, so the device reuses its pages instead of holding both)."""
+    try:
+        fn = _DECODE_CACHE.get(model)
+        if fn is None:
+            fn = jax.jit(make_decode_step(model), donate_argnums=(1,))
+            _DECODE_CACHE[model] = fn
+        return fn
+    except TypeError:                        # unhashable/unweakrefable model
+        return jax.jit(make_decode_step(model), donate_argnums=(1,))
+
+
 def greedy_generate(model, params, prompt, max_new: int, max_len: int,
-                    cache_dtype=jnp.float32):
-    """Simple autoregressive loop used by the serving example."""
+                    cache_dtype=jnp.bfloat16):
+    """Simple autoregressive loop used by the serving example.
+
+    ``cache_dtype`` defaults to bf16, matching ``make_prefill_step`` —
+    the fp32 default used to silently double the decode cache footprint
+    relative to a prefilled cache.
+    """
     b, s = prompt.shape
     cache = model.cache_init(b, max_len, dtype=cache_dtype)
     logits, cache, _ = model.apply(params, prompt, cache=cache)
-    decode = jax.jit(make_decode_step(model))
+    decode = jitted_decode_step(model)
     tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
     out = [tok]
     for i in range(max_new - 1):

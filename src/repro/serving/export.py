@@ -1,0 +1,151 @@
+"""Checkpoint export — the train side of the train→deploy loop.
+
+``Strategy.export(state, client_idx)`` materializes the full deployable
+model from ANY of the five training strategies as a ``ServableModel``:
+
+  * centralized / FL: the one global param tree (every hospital scores
+    with the same model, so ``client_idx`` is ignored).
+  * SL / SFLv2 / SFLv3 / SFLv1: hospital ``client_idx``'s client
+    segment(s) stitched with the shared server segment at the cut layer —
+    exactly the composition ``Strategy.params_for_eval`` uses, so the
+    per-client-head (U-shaped/NLS) variants resolve per DESIGN.md: a
+    sample scored by the export passes through that hospital's own
+    front (and tail) and the shared middle.
+
+``ServableModel.scores`` replicates ``Strategy.scores`` VERBATIM — same
+pad-to-grid, same nested-vmap program, same singleton-hospital stacking —
+so the exported model's scores are bit-identical to the training-side
+eval (asserted per strategy x precision in tests/test_serving_service.py).
+
+``save_servable`` / ``load_servable`` round-trip the export through a
+single msgpack file (params flattened exactly like ``train.checkpoint``
+plus a JSON-safe meta record); loading needs only the adapter — the
+param structure is recovered from ``adapter.init``'s shape tree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+from repro.core.partition import SplitAdapter, stack_trees
+
+
+@dataclasses.dataclass
+class ServableModel:
+    """A deployable full model: adapter + stitched param tree + metadata.
+
+    ``shared`` mirrors ``Strategy.shared_eval_params`` — it selects the
+    exact vmap axes ``Strategy.scores`` uses, which is what makes the
+    export's scores bit-identical to the training-side eval.
+    """
+    adapter: SplitAdapter
+    params: dict
+    shared: bool
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def family(self) -> str:
+        return self.adapter.name
+
+    def _scores_fn(self):
+        if not hasattr(self, "_scores_jit"):
+            fs = self.adapter.full_scores
+            in_p = None if self.shared else 0
+            self._scores_jit = jax.jit(jax.vmap(
+                lambda p, d: jax.vmap(partial(fs, p))(d),
+                in_axes=(in_p, 0)))
+        return self._scores_jit
+
+    def scores(self, data: dict, batch_size: int = 60) -> np.ndarray:
+        """Per-sample scores for every sample of ``data`` — the same
+        pad-and-slice grid as ``Strategy.scores`` (bit-exact to it)."""
+        n = len(next(iter(data.values())))
+        if n == 0:
+            return np.zeros((0,))
+        params = self.params
+        if not self.shared:
+            params = stack_trees([params])
+        bs = min(batch_size, n)
+        nb = -(-n // bs)
+        L = nb * bs
+        stacked = {}
+        for k, v in data.items():
+            v = np.asarray(v)
+            if len(v) != L:
+                v = np.concatenate([v, np.repeat(v[-1:], L - len(v),
+                                                 axis=0)])
+            stacked[k] = v.reshape(1, nb, bs, *v.shape[1:])
+        out = np.asarray(self._scores_fn()(params, stacked))
+        return out.reshape(L, *out.shape[3:])[:n]
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round-trip
+# ---------------------------------------------------------------------------
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out, treedef
+
+
+def save_servable(path: str, servable: ServableModel) -> None:
+    """One msgpack file: JSON-safe meta + flattened param leaves."""
+    flat, _ = _flatten(servable.params)
+    payload = {
+        "__meta__": json.dumps({**servable.meta,
+                                "family": servable.family,
+                                "shared": bool(servable.shared)}),
+        "params": {k: {"dtype": str(v.dtype), "shape": list(v.shape),
+                       "data": v.tobytes()} for k, v in flat.items()},
+    }
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+
+
+def load_servable(path: str, adapter: SplitAdapter) -> ServableModel:
+    """Restore an export; the param structure comes from ``adapter.init``
+    (segments the export lacks — e.g. no tail — are dropped to match)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    meta = json.loads(payload["__meta__"])
+    recs = payload["params"]
+    like = jax.eval_shape(adapter.init, jax.random.key(0))
+    flat_spec, treedef = jax.tree_util.tree_flatten_with_path(like)
+    flat_like = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                 for p in path) for path, _ in flat_spec]
+    missing = [k for k in flat_like if k not in recs]
+    if missing:
+        raise ValueError(f"checkpoint {path} lacks params for {missing[:3]}"
+                         f"{'...' if len(missing) > 3 else ''}")
+    leaves = []
+    for key, (_, spec) in zip(flat_like, flat_spec):
+        rec = recs[key]
+        if tuple(rec["shape"]) != tuple(spec.shape):
+            raise ValueError(
+                f"checkpoint {path} param {key!r} has shape "
+                f"{tuple(rec['shape'])}, adapter expects "
+                f"{tuple(spec.shape)} — architecture mismatch")
+        arr = np.frombuffer(rec["data"], dtype=np.dtype(rec["dtype"]))
+        leaves.append(jnp.asarray(arr.reshape(rec["shape"])))
+    params = jax.tree.unflatten(treedef, leaves)
+    shared = bool(meta.pop("shared"))
+    meta.pop("family", None)
+    return ServableModel(adapter=adapter, params=params, shared=shared,
+                         meta=meta)
+
+
+__all__ = ["ServableModel", "save_servable", "load_servable"]

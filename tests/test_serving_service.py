@@ -1,0 +1,268 @@
+"""Train→deploy loop: export bit-exactness per strategy x precision,
+checkpoint round-trip, chunked-eval parity, zero-compile steady state,
+torn-swap safety, and the batching front end."""
+
+import concurrent.futures as cf
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro import optim as O
+from repro.core.partition import cast_adapter, cnn_adapter
+from repro.core.strategies import make_strategy
+from repro.data.synthetic import make_cxr_clients
+from repro.models.cnn import DenseNetConfig, build_densenet
+from repro.serving import (Backpressure, BucketScorer, ScreeningService,
+                           load_servable, save_servable)
+
+METHODS = ["centralized", "fl", "sl_ac", "sl_am", "sflv2_ac", "sflv3_ac",
+           "sflv1_ac"]
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    clients = make_cxr_clients(seed=0, train_per_client=[12, 9, 8],
+                               val_per_client=4, test_per_client=13,
+                               image_size=16, n_clients=3)
+    cfg = DenseNetConfig(growth=4, blocks=(1, 1), stem_ch=8, cut_layer=1)
+    return clients, cfg
+
+
+def _trained(method, clients, cfg, precision="fp32"):
+    adapter = cnn_adapter(build_densenet(cfg))
+    if precision == "bf16":
+        adapter = cast_adapter(adapter, precision)
+    st = make_strategy(method, adapter, lambda: O.adam(1e-3), len(clients))
+    state = st.setup(jax.random.key(0))
+    state, _ = st.run_epoch(state, [c.train for c in clients],
+                            np.random.default_rng(0), 4)
+    return st, state, adapter
+
+
+# -- export ------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize("precision", ["fp32", "bf16"])
+def test_export_scores_bitexact(method, precision, tiny_setup):
+    """Exported model scores == Strategy.scores to the BIT, for every
+    strategy and both training precisions (the per-client-head variants
+    must stitch the right front/tail per hospital)."""
+    clients, cfg = tiny_setup
+    st, state, _ = _trained(method, clients, cfg, precision)
+    for i in range(len(clients)):
+        ref = np.asarray(st.scores(state, i, clients[i].test, batch_size=5))
+        sv = st.export(state, client_idx=i)
+        got = np.asarray(sv.scores(clients[i].test, batch_size=5))
+        np.testing.assert_array_equal(ref, got)
+        assert sv.meta["strategy"] == st.name
+
+
+def test_export_distinct_heads(tiny_setup):
+    """Per-client-head strategies export DIFFERENT models per hospital."""
+    clients, cfg = tiny_setup
+    st, state, _ = _trained("sflv3_ac", clients, cfg)
+    s0 = np.asarray(st.export(state, 0).scores(clients[0].test, 5))
+    s1 = np.asarray(st.export(state, 1).scores(clients[0].test, 5))
+    assert not np.array_equal(s0, s1)
+
+
+def test_checkpoint_roundtrip(tmp_path, tiny_setup):
+    clients, cfg = tiny_setup
+    st, state, adapter = _trained("sflv3_ac", clients, cfg)
+    sv = st.export(state, client_idx=2, meta={"round": 7})
+    p = str(tmp_path / "model.msgpack")
+    save_servable(p, sv)
+    sv2 = load_servable(p, adapter)
+    assert sv2.meta["strategy"] == "sflv3_ac"
+    assert sv2.meta["round"] == 7 and sv2.meta["client_idx"] == 2
+    assert sv2.shared == sv.shared
+    np.testing.assert_array_equal(
+        np.asarray(sv.scores(clients[2].test, 5)),
+        np.asarray(sv2.scores(clients[2].test, 5)))
+
+
+def test_load_servable_missing_keys(tmp_path, tiny_setup):
+    clients, cfg = tiny_setup
+    st, state, _ = _trained("fl", clients, cfg)
+    sv = st.export(state)
+    p = str(tmp_path / "model.msgpack")
+    save_servable(p, sv)
+    other = cnn_adapter(build_densenet(
+        DenseNetConfig(growth=8, blocks=(1, 1), stem_ch=8, cut_layer=1)))
+    with pytest.raises(ValueError, match="mismatch"):
+        load_servable(p, other)
+
+
+# -- chunked eval ------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["fl", "sflv3_ac"])
+def test_chunked_eval_parity(method, tiny_setup):
+    """Chunked scores/scores_all == the single-dispatch path <= 1e-5
+    (empirically bit-equal: same vmapped program per example)."""
+    clients, cfg = tiny_setup
+    st, state, _ = _trained(method, clients, cfg)
+    datas = [c.test for c in clients]
+    ref_all = st.scores_all(state, datas, batch_size=4)
+    for ch in (1, 2, 100):
+        got_all = st.scores_all(state, datas, batch_size=4,
+                                chunk_batches=ch)
+        for r, g in zip(ref_all, got_all):
+            np.testing.assert_allclose(r, g, atol=1e-5)
+    ref = np.asarray(st.scores(state, 1, datas[1], batch_size=4))
+    got = np.asarray(st.scores(state, 1, datas[1], batch_size=4,
+                               chunk_batches=2))
+    np.testing.assert_allclose(ref, got, atol=1e-5)
+
+
+# -- scoring core ------------------------------------------------------------
+
+def test_scorer_zero_fresh_compiles(tiny_setup):
+    """Every request size (including > largest bucket) routes through the
+    pre-lowered ladder; n_compiles never moves after construction."""
+    clients, cfg = tiny_setup
+    st, state, _ = _trained("fl", clients, cfg)
+    sv = st.export(state)
+    img = clients[0].test["image"]
+    sc = BucketScorer(sv, image_shape=img.shape[1:], buckets=(1, 2, 4))
+    built = sc.n_compiles
+    assert built == 3
+    ref = np.asarray(st.scores(state, 0, clients[0].test, batch_size=5))
+    for n in (1, 2, 3, 4, 5, 9, 13):
+        got, info = sc.score({"image": img[:n]})
+        np.testing.assert_array_equal(got, ref[:n].ravel())
+        assert info["n_dispatch"] == -(-n // 4)
+    assert sc.n_compiles == built
+    assert sc.n_dispatches > 0
+
+
+def test_scorer_bf16_precision(tiny_setup):
+    clients, cfg = tiny_setup
+    st, state, _ = _trained("fl", clients, cfg)
+    sv = st.export(state)
+    img = clients[0].test["image"]
+    sc = BucketScorer(sv, image_shape=img.shape[1:], buckets=(4,),
+                      precision="bf16")
+    got, _ = sc.score({"image": img[:4]})
+    ref = np.asarray(st.scores(state, 0, clients[0].test, batch_size=5))[:4]
+    assert got.dtype == np.float32
+    np.testing.assert_allclose(got, ref.ravel(), atol=0.05)
+    with pytest.raises(ValueError):
+        BucketScorer(sv, image_shape=img.shape[1:], precision="fp8")
+
+
+def test_swap_rejects_mismatched_tree(tiny_setup):
+    clients, cfg = tiny_setup
+    st, state, _ = _trained("fl", clients, cfg)
+    sv = st.export(state)
+    sc = BucketScorer(sv, image_shape=clients[0].test["image"].shape[1:],
+                      buckets=(1,))
+    with pytest.raises(ValueError):
+        sc.swap({"front": sv.params["front"]})
+    with pytest.raises(ValueError):
+        sc.swap(jax.tree.map(lambda l: np.zeros((3,), np.float32),
+                             sv.params))
+
+
+def test_swap_never_serves_torn_tree(tiny_setup):
+    """Hammer score() from threads while swapping between two param sets
+    whose full-model scores differ everywhere: every served score must be
+    bit-equal to ONE of the two models' scores — a torn (half-old/half-new)
+    tree would produce a third value."""
+    clients, cfg = tiny_setup
+    st, state, _ = _trained("fl", clients, cfg)
+    sv0 = st.export(state)
+    state2, _ = st.run_epoch(state, [c.train for c in clients],
+                             np.random.default_rng(1), 4)
+    sv1 = st.export(state2)
+    img = clients[0].test["image"][:4]
+    sc = BucketScorer(sv0, image_shape=img.shape[1:], buckets=(4,))
+    a, _ = sc.score({"image": img})
+    sc.swap(sv1)
+    b, _ = sc.score({"image": img})
+    assert not np.array_equal(a, b)
+
+    stop = threading.Event()
+
+    def swapper():
+        flip = 0
+        while not stop.is_set():
+            sc.swap(sv1 if flip % 2 == 0 else sv0)
+            flip += 1
+
+    t = threading.Thread(target=swapper)
+    t.start()
+    try:
+        with cf.ThreadPoolExecutor(4) as ex:
+            outs = list(ex.map(
+                lambda _: sc.score({"image": img})[0], range(60)))
+    finally:
+        stop.set()
+        t.join()
+    for got in outs:
+        assert np.array_equal(got, a) or np.array_equal(got, b)
+    assert sc.version >= 2
+
+
+# -- batching front end ------------------------------------------------------
+
+def test_service_batches_and_matches_eval(tiny_setup):
+    clients, cfg = tiny_setup
+    st, state, _ = _trained("fl", clients, cfg)
+    sv = st.export(state)
+    data = clients[0].test
+    ref = np.asarray(st.scores(state, 0, data, batch_size=5)).ravel()
+    with ScreeningService(sv, image_shape=data["image"].shape[1:],
+                          buckets=(1, 2, 4), max_wait_s=0.002,
+                          trace=True) as svc:
+        with cf.ThreadPoolExecutor(8) as ex:
+            got = list(ex.map(
+                lambda i: svc.score_one({"image": data["image"][i]}),
+                range(len(ref))))
+        stats = svc.stats()
+        events = svc.trace_events()
+    np.testing.assert_array_equal(np.asarray(got, np.float32), ref)
+    assert stats["n"] == len(ref)
+    assert stats["total_p99_ms"] >= stats["total_p50_ms"] >= 0
+    # per-request queue spans + batch phase spans made it into the trace
+    names = {e["name"] for e in events}
+    assert {"queue_wait", "dispatch", "pad", "readback"} <= names
+    assert sum(e["name"] == "queue_wait" for e in events) == len(ref)
+
+
+def test_service_backpressure(tiny_setup):
+    clients, cfg = tiny_setup
+    st, state, _ = _trained("fl", clients, cfg)
+    sv = st.export(state)
+    img = clients[0].test["image"]
+    # queue cap (3) below the only bucket (4): the dispatcher can't fire
+    # before max_wait, so the 4th submission deterministically sheds
+    with ScreeningService(sv, image_shape=img.shape[1:], buckets=(4,),
+                          max_wait_s=0.3, max_queue=3) as svc:
+        reqs = [svc.submit({"image": img[0]}) for _ in range(3)]
+        with pytest.raises(Backpressure):
+            svc.submit({"image": img[0]})
+        # shed requests don't poison the queue: the waiting three still
+        # complete as one padded dispatch once max_wait expires
+        for r in reqs:
+            assert r.done.wait(5)
+
+
+def test_service_hot_swap_versions(tiny_setup):
+    clients, cfg = tiny_setup
+    st, state, _ = _trained("fl", clients, cfg)
+    # export BEFORE the next round: strategies update state in place, so
+    # the snapshot must be materialized when it is current
+    sv0 = st.export(state)
+    state2, _ = st.run_epoch(state, [c.train for c in clients],
+                             np.random.default_rng(1), 4)
+    img = clients[0].test["image"]
+    with ScreeningService(sv0, image_shape=img.shape[1:],
+                          buckets=(1,), max_wait_s=0.0) as svc:
+        s0 = svc.score_one({"image": img[0]})
+        assert svc.version == 0
+        svc.swap(st.export(state2))
+        assert svc.version == 1
+        s1 = svc.score_one({"image": img[0]})
+    assert s0 != s1
